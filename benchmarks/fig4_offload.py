@@ -1,0 +1,68 @@
+"""Paper Fig. 4 reproduction: automatic offload of tdFIR and MRI-Q.
+
+Three columns per app:
+  1. paper          — the paper's measured FPGA-vs-CPU speedup (4.0x / 7.1x,
+                      Intel PAC Arria10 GX vs Xeon Bronze 3104).
+  2. measured       — the planner's selected pattern vs the all-ref baseline
+                      on THIS container's backend.  This container has no
+                      accelerator, so both sides run on the same CPU core:
+                      the planner mostly (correctly) finds there is little
+                      to win — the environment-adaptive thesis working in
+                      reverse.  What reproduces is the *behaviour*: staged
+                      narrowing (a=5, c=3), <= d=4 measured patterns, winner
+                      combination round, resource-cap enforcement.
+  3. projected_tpu  — roofline projection of the selected region's Pallas
+                      kernel on one TPU v5e chip vs the measured CPU
+                      baseline time (the hardware this framework targets).
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                                    # noqa: E402
+
+from repro.apps import mriq, tdfir                            # noqa: E402
+from repro.core.planner import AutoOffloader, PlannerConfig   # noqa: E402
+from repro.launch.constants import projected_tpu_seconds      # noqa: E402
+
+PAPER = {"tdfir": 4.0, "mriq": 7.1}
+
+
+def run_app(name: str, make_program, reps: int = 5) -> dict:
+    prog = make_program()
+    planner = AutoOffloader(PlannerConfig(reps=reps))
+    report = planner.plan(prog, jax.random.PRNGKey(0))
+    # projected: hot region's kernel roofline time on 1 v5e chip vs its
+    # share of the CPU baseline
+    hot = max(report.candidates, key=lambda c: c.analysis.weighted_flops)
+    proj = projected_tpu_seconds(hot.analysis.flops,
+                                 hot.analysis.boundary_bytes,
+                                 hot.analysis.transcendentals)
+    projected = report.baseline.run_seconds / max(proj["seconds"], 1e-12)
+    return {
+        "app": name,
+        "paper_speedup": PAPER[name],
+        "measured_speedup": report.speedup,
+        "projected_tpu_speedup": projected,
+        "baseline_ms": report.baseline.run_seconds * 1e3,
+        "best_pattern": report.best_pattern,
+        "n_measured": len(report.measurements),
+        "report": report,
+    }
+
+
+def main() -> None:
+    print("app,paper_speedup,measured_speedup_cpu,projected_v5e_speedup,"
+          "baseline_ms,n_measured,best_pattern")
+    for name, make in (("tdfir", tdfir.make_program), ("mriq", mriq.make_program)):
+        r = run_app(name, make)
+        print(f"{r['app']},{r['paper_speedup']},{r['measured_speedup']:.2f},"
+              f"{r['projected_tpu_speedup']:.0f},{r['baseline_ms']:.2f},"
+              f"{r['n_measured']},{'+'.join(r['best_pattern']) or 'none'}")
+        print("#", r["report"].summary().replace("\n", "\n# "))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: ref-vs-offload wall time on this backend +
+roofline-projected v5e time per kernel.  One row per kernel (CSV:
+name,us_per_call,derived)."""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.core.intensity import analyze_region               # noqa: E402
+from repro.core.regions import variants                       # noqa: E402
+from repro.launch.constants import projected_tpu_seconds      # noqa: E402
+import repro.models.blocks                                    # noqa: E402,F401 (registers ref/offload)
+import repro.kernels.ops                                      # noqa: E402,F401 (registers pallas)
+
+
+def _time(fn, args, reps=5):
+    jitted = jax.jit(fn)
+    jax.block_until_ready(jitted(*args))
+    ts = []
+    for _ in range(reps):
+        t = time.time()
+        jax.block_until_ready(jitted(*args))
+        ts.append(time.time() - t)
+    return float(np.median(ts))
+
+
+def bench_region(region: str, args, kwargs=None) -> list[str]:
+    rows = []
+    kwargs = kwargs or {}
+    base = None
+    names = sorted(variants(region), key=lambda v: (v != "ref", v))  # ref first
+    for vname in names:
+        if vname == "pallas":
+            continue                      # interpret-mode timing is meaningless
+        fn = variants(region)[vname]
+        f = (lambda fn: lambda *a: fn(*a, **kwargs))(fn)
+        t = _time(f, args)
+        if vname == "ref":
+            base = t
+        ana = analyze_region(f, *args, name=region)
+        proj = projected_tpu_seconds(ana.flops, ana.boundary_bytes,
+                                     ana.transcendentals)
+        rows.append(f"{region}/{vname},{t*1e6:.1f},"
+                    f"v5e_proj_us={proj['seconds']*1e6:.2f};bound={proj['bound']}"
+                    + (f";speedup_vs_ref={base/t:.2f}" if base else ""))
+    return rows
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    print("name,us_per_call,derived")
+    # attention
+    q = jax.random.normal(key, (2, 8, 1024, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 2, 1024, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 2, 1024, 64), jnp.float32)
+    for row in bench_region("attn_core", (q, k, v), {"causal": True}):
+        print(row)
+    # rglru scan
+    a = jax.random.uniform(key, (4, 1024, 512), jnp.float32, 0.6, 0.99)
+    b = jax.random.normal(key, (4, 1024, 512), jnp.float32) * 0.1
+    h0 = jnp.zeros((4, 512), jnp.float32)
+    for row in bench_region("rglru_scan", (a, b, h0)):
+        print(row)
+    # ssm scan
+    a4 = jax.random.uniform(key, (2, 512, 256, 16), jnp.float32, 0.6, 0.99)
+    bx = jax.random.normal(key, (2, 512, 256, 16), jnp.float32) * 0.1
+    c = jax.random.normal(key, (2, 512, 16), jnp.float32)
+    h0s = jnp.zeros((2, 256, 16), jnp.float32)
+    for row in bench_region("ssm_scan", (a4, bx, c, h0s)):
+        print(row)
+    # mlp
+    x = jax.random.normal(key, (512, 512), jnp.bfloat16)
+    wg = jax.random.normal(key, (512, 1024), jnp.bfloat16)
+    wu = jax.random.normal(key, (512, 1024), jnp.bfloat16)
+    wd = jax.random.normal(key, (1024, 512), jnp.bfloat16)
+    for row in bench_region("mlp_core", (x, wg, wu, wd)):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  fig4          paper Fig. 4 (tdFIR / MRI-Q automatic-offload speedups)
+  conditions    paper §5.1.2 evaluation-conditions table (loop narrowing)
+  kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
+  roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--section NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "fig4", "conditions", "kernels", "roofline"])
+    ap.add_argument("--dryrun-jsonl", default=None)
+    args = ap.parse_args()
+
+    if args.section in ("all", "conditions"):
+        print("== paper §5.1.2 conditions (loop extraction & narrowing) ==")
+        from benchmarks import loop_extraction
+        loop_extraction.main()
+        print()
+    if args.section in ("all", "fig4"):
+        print("== paper Fig. 4 (automatic offload speedup) ==")
+        from benchmarks import fig4_offload
+        fig4_offload.main()
+        print()
+    if args.section in ("all", "kernels"):
+        print("== kernel bench (name,us_per_call,derived) ==")
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+        print()
+    if args.section in ("all", "roofline"):
+        from benchmarks import roofline, scaling
+        path = args.dryrun_jsonl
+        if path is None:
+            for cand in ("results/dryrun_final.jsonl", "results/dryrun_v3.jsonl",
+                         "results/dryrun_v2.jsonl", "results/dryrun.jsonl"):
+                if os.path.exists(cand):
+                    path = cand
+                    break
+        if path and os.path.exists(path):
+            print(f"== roofline (single-pod, from {path}) ==")
+            rows = roofline.load_rows(path)
+            print(roofline.format_table(rows, "single"))
+            print()
+            print(f"== roofline (multi-pod, from {path}) ==")
+            print(roofline.format_table(rows, "multi"))
+            print()
+            print("== weak scaling (1-pod vs 2-pod, dominant-term speedup) ==")
+            sys.argv = ["scaling", "--in", path]
+            scaling.main()
+        else:
+            print("== roofline: no dry-run JSONL found; run "
+                  "`python -m repro.launch.dryrun --all` first ==")
+
+
+if __name__ == "__main__":
+    main()

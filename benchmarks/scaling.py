@@ -1,0 +1,42 @@
+"""Weak-scaling table: single-pod (256) vs multi-pod (512) per cell.
+
+Scaling efficiency = t_single / t_multi for the dominant roofline term
+(fixed global batch, so perfect weak scaling across the pod axis would halve
+every per-chip term: efficiency 2.0 = ideal; < 2.0 measures the cross-pod
+collective overhead the 'pod' axis adds).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.roofline import load_rows  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_final.jsonl")
+    args = ap.parse_args()
+    rows = load_rows(args.inp)
+    by_cell: dict = {}
+    for r in rows:
+        by_cell.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    print(f"{'arch':22s} {'shape':12s} {'1-pod bound(s)':>15s} "
+          f"{'2-pod bound(s)':>15s} {'speedup':>8s} {'ideal':>6s}")
+    for (arch, shape), m in sorted(by_cell.items()):
+        if "single" not in m or "multi" not in m:
+            continue
+        t1 = m["single"]["step_time_s"]
+        t2 = m["multi"]["step_time_s"]
+        if t2 <= 0:
+            continue
+        print(f"{arch:22s} {shape:12s} {t1:15.4f} {t2:15.4f} "
+              f"{t1/t2:8.2f} {'2.00':>6s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Quickstart: the paper's automatic offload planner on a user program.
+
+Declare regions (the "loop statements"), give the planner your program, and
+it runs the staged search: AI filter -> cheap-lowering resource filter ->
+budgeted measured patterns -> best pattern.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, register_variant
+
+
+# --- 1. write your compute regions with a loop-faithful ref and an offload
+#        variant (what the accelerator kernel computes) ---------------------
+@register_variant("blur", "ref")
+def blur_ref(img):
+    def row(i, acc):
+        r = (img[i - 1] + img[i] + img[i + 1]) / 3.0
+        return acc.at[i].set(r)
+    return jax.lax.fori_loop(1, img.shape[0] - 1, row, jnp.zeros_like(img))
+
+
+@register_variant("blur", "offload")
+def blur_offload(img):
+    out = (img[:-2] + img[1:-1] + img[2:]) / 3.0
+    return jnp.pad(out, ((1, 1), (0, 0)))
+
+
+@register_variant("hist", "ref")
+def hist_ref(img):
+    def px(i, acc):
+        b = jnp.clip((img.reshape(-1)[i] * 8).astype(jnp.int32), 0, 7)
+        return acc.at[b].add(1.0)
+    return jax.lax.fori_loop(0, img.size, px, jnp.zeros(8))
+
+
+@register_variant("hist", "offload")
+def hist_offload(img):
+    b = jnp.clip((img.reshape(-1) * 8).astype(jnp.int32), 0, 7)
+    return jnp.zeros(8).at[b].add(1.0)
+
+
+# --- 2. describe the program ------------------------------------------------
+def build(impl: Impl):
+    def run(img):
+        img = dispatch("blur", impl, img)
+        return dispatch("hist", impl, img)
+    return run
+
+
+abstract = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+program = OffloadableProgram(
+    name="quickstart",
+    regions=[Region("blur", blur_ref, (abstract,)),
+             Region("hist", hist_ref, (abstract,))],
+    build=build,
+    sample_inputs=lambda key: (jax.random.uniform(key, (512, 512)),),
+    source_loop_count=3,
+)
+
+# --- 3. plan ------------------------------------------------------------------
+report = AutoOffloader(PlannerConfig(reps=3)).plan(program)
+print(report.summary())

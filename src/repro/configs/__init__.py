@@ -1,0 +1,21 @@
+"""Config registry: 10 assigned architectures + paper evaluation apps + shapes."""
+from repro.configs.base import (
+    ARCH_IDS,
+    ATTN,
+    LOCAL_ATTN,
+    RGLRU,
+    SHAPES,
+    SSM,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    register,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS", "ATTN", "LOCAL_ATTN", "RGLRU", "SHAPES", "SSM",
+    "ModelConfig", "ShapeConfig", "all_configs", "get_config", "register",
+    "shape_applicable",
+]

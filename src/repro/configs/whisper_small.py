@@ -1,0 +1,28 @@
+"""whisper-small — encoder-decoder transformer; conv audio frontend STUBBED.
+
+[arXiv:2212.04356; unverified]  12L d_model=768 12H (MHA kv=12) d_ff=3072
+vocab=51865.  Encoder consumes 1500 precomputed frame embeddings (the conv1d
+frontend is a stub per the assignment); the 12-layer decoder cross-attends.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,            # decoder layers
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51_865,
+    encoder_layers=12,
+    encoder_seq=1500,
+    cross_attention=True,
+    frontend="audio_stub",
+    frontend_seq=1500,
+    frontend_dim=768,
+    tie_embeddings=True,
+    rope_theta=10_000.0,      # (whisper uses learned/sinusoidal; RoPE stands in)
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,192 @@
+"""The paper's automatic loop-offload planner (§3.3, Fig. 2) — TPU-native.
+
+Pipeline, faithful to the paper with the FPGA->TPU substitutions of
+DESIGN.md §2:
+
+  Step 1  code analysis        — region census + jaxpr loop census
+  Step 2  AI filter            — arithmetic intensity per region, keep top-a
+  Step 3  resource filter      — cheap lowering per offload variant ->
+                                 vmem fraction; efficiency = AI / fraction;
+                                 keep top-c
+  Step 4  measured search      — round 1: each surviving single-region
+                                 pattern; round 2: the combination of round-1
+                                 winners (skipped if summed resource fraction
+                                 exceeds the cap); total measured patterns
+                                 <= d (baseline excluded, as in the paper
+                                 where all-CPU is the pre-existing reference)
+  Step 5  select               — fastest measured pattern
+
+Defaults a=5, c=3, d=4 match the paper's evaluation conditions (§5.1.2).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, variants
+from repro.core.resources import ResourceEstimate, precompile
+from repro.core.search import Measurement, time_callable
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    top_a: int = 5              # AI filter width (paper: 5)
+    top_c: int = 3              # resource-efficiency filter width (paper: 3)
+    max_measurements: int = 4   # d (paper: 4)
+    resource_cap: float = 1.0   # summed vmem fraction cap for combinations
+    unroll_b: int = 1           # kernel unroll knob (paper: 1)
+    warmup: int = 1
+    reps: int = 5
+
+
+@dataclass
+class CandidateInfo:
+    region: str
+    analysis: RegionAnalysis
+    resources: ResourceEstimate | None = None
+
+    @property
+    def efficiency(self) -> float:
+        if self.resources is None or not self.resources.lower_ok:
+            return 0.0
+        return self.analysis.arithmetic_intensity / max(
+            self.resources.resource_fraction, 1e-6)
+
+
+@dataclass
+class PlanReport:
+    program: str
+    source_loop_count: int
+    jaxpr_loop_count: int
+    candidates: list[CandidateInfo] = field(default_factory=list)
+    ai_selected: list[str] = field(default_factory=list)       # after Step 2
+    eff_selected: list[str] = field(default_factory=list)      # after Step 3
+    baseline: Measurement | None = None
+    measurements: list[Measurement] = field(default_factory=list)
+    best_pattern: dict = field(default_factory=dict)
+    speedup: float = 0.0
+    skipped_combinations: list[str] = field(default_factory=list)
+
+    def summary(self) -> str:
+        lines = [f"== offload plan: {self.program} ==",
+                 f"loops: source={self.source_loop_count} jaxpr={self.jaxpr_loop_count}",
+                 f"AI top-a: {self.ai_selected}",
+                 f"efficiency top-c: {self.eff_selected}"]
+        for c in self.candidates:
+            res = c.resources
+            lines.append(
+                f"  {c.region:18s} AI={c.analysis.arithmetic_intensity:10.2f} "
+                f"flops={c.analysis.weighted_flops:.3e} "
+                f"vmem_frac={res.resource_fraction if res else float('nan'):8.4f} "
+                f"eff={c.efficiency:10.1f}")
+        if self.baseline:
+            lines.append(f"baseline (all-ref): {self.baseline.run_seconds*1e3:.2f} ms")
+        for m in self.measurements:
+            lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
+                         + ("" if m.ok else f"  FAILED {m.error}"))
+        lines.append(f"best: {self.best_pattern}  speedup={self.speedup:.2f}x")
+        return "\n".join(lines)
+
+
+class AutoOffloader:
+    def __init__(self, config: PlannerConfig = PlannerConfig()):
+        self.config = config
+
+    # ------------------------------------------------------------------
+    def plan(self, program: OffloadableProgram,
+             key: jax.Array | None = None) -> PlanReport:
+        cfg = self.config
+        key = key if key is not None else jax.random.PRNGKey(0)
+        sample = program.sample_inputs(key)
+
+        # ---- Step 1: code analysis ------------------------------------
+        full_ref = program.build(Impl())
+        jaxpr_loops = count_loops(full_ref, *sample)
+        report = PlanReport(program=program.name,
+                            source_loop_count=program.source_loop_count,
+                            jaxpr_loop_count=jaxpr_loops)
+
+        # ---- Step 2: arithmetic-intensity filter ----------------------
+        cands: list[CandidateInfo] = []
+        for r in program.regions:
+            ana = analyze_region(r.analysis_fn, *r.analysis_args, name=r.name)
+            cands.append(CandidateInfo(region=r.name, analysis=ana))
+        report.candidates = cands
+        by_ai = sorted(cands, key=lambda c: -c.analysis.arithmetic_intensity)
+        ai_set = [c.region for c in by_ai[:cfg.top_a]]
+        report.ai_selected = ai_set
+
+        # ---- Step 3: resource-efficiency filter -----------------------
+        region_map = {r.name: r for r in program.regions}
+        for c in cands:
+            if c.region not in ai_set:
+                continue
+            r = region_map[c.region]
+            var = (r.deploy_variant
+                   if r.deploy_variant in variants(c.region) else r.measure_variant)
+            fn = variants(c.region).get(var)
+            if fn is None:
+                continue
+            c.resources = precompile(c.region, var, fn, r.analysis_args,
+                                     r.static_kwargs)
+        eligible = [c for c in cands if c.region in ai_set and c.resources
+                    and c.resources.lower_ok
+                    and c.resources.resource_fraction <= cfg.resource_cap]
+        by_eff = sorted(eligible, key=lambda c: -c.efficiency)
+        eff_set = [c.region for c in by_eff[:cfg.top_c]]
+        report.eff_selected = eff_set
+
+        # ---- Step 4: measured pattern search --------------------------
+        report.baseline = time_callable(full_ref, sample, warmup=cfg.warmup,
+                                        reps=cfg.reps, pattern="all-ref")
+        budget = cfg.max_measurements
+        frac = {c.region: c.resources.resource_fraction for c in eligible}
+
+        def measure(impl: Impl) -> Measurement:
+            fn = program.build(impl)
+            m = time_callable(fn, sample, warmup=cfg.warmup, reps=cfg.reps,
+                              pattern=impl.describe())
+            report.measurements.append(m)
+            return m
+
+        singles: list[tuple[str, Measurement]] = []
+        for region in eff_set:
+            if budget <= 0:
+                break
+            impl = Impl({region: region_map[region].measure_variant})
+            singles.append((region, measure(impl)))
+            budget -= 1
+
+        winners = [r for r, m in singles
+                   if m.ok and m.run_seconds < report.baseline.run_seconds]
+        # round 2: combine winners (largest combo first), resource-capped
+        for size in range(len(winners), 1, -1):
+            if budget <= 0:
+                break
+            for combo in itertools.combinations(winners, size):
+                if budget <= 0:
+                    break
+                if sum(frac.get(r, 0.0) for r in combo) > cfg.resource_cap:
+                    report.skipped_combinations.append("+".join(combo))
+                    continue
+                impl = Impl({r: region_map[r].measure_variant for r in combo})
+                measure(impl)
+                budget -= 1
+
+        # ---- Step 5: select -------------------------------------------
+        ok_measurements = [m for m in report.measurements if m.ok]
+        best = min(ok_measurements, key=lambda m: m.run_seconds,
+                   default=None)
+        if best is not None and best.run_seconds < report.baseline.run_seconds:
+            report.best_pattern = dict(
+                item.split("=") for item in best.pattern.split("+")) \
+                if best.pattern != "all-ref" else {}
+            report.speedup = report.baseline.run_seconds / best.run_seconds
+        else:
+            report.best_pattern = {}
+            report.speedup = 1.0
+        return report

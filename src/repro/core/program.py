@@ -1,0 +1,37 @@
+"""Offloadable-program abstraction — what the planner plans over.
+
+A program declares its *regions* (the paper's loop statements), how to build
+a runnable callable for a chosen offload pattern (``Impl``), and sample
+inputs (the paper's "sample processing specified by the application" used for
+verification-environment measurement).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core.regions import Impl
+
+
+@dataclass
+class Region:
+    """One offload candidate (paper: one loop statement)."""
+    name: str
+    analysis_fn: Callable            # the region's computation, traceable
+    analysis_args: tuple             # ShapeDtypeStructs (full problem size)
+    measure_variant: str = "offload"  # variant timed on this backend
+    deploy_variant: str = "pallas"    # variant deployed on TPU (if registered)
+    static_kwargs: dict = field(default_factory=dict)
+
+
+@dataclass
+class OffloadableProgram:
+    """A whole application (paper: the C/C++ app given by the user)."""
+    name: str
+    regions: list[Region]
+    build: Callable[[Impl], Callable]       # impl -> callable(*sample_args)
+    sample_inputs: Callable[[jax.Array], tuple]   # rng key -> concrete args
+    source_loop_count: int = 0               # loops in the original C source
+    description: str = ""

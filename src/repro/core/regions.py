@@ -1,0 +1,58 @@
+"""Offloadable regions — the TPU analogue of the paper's "loop statements".
+
+The paper enumerates loop statements of a C program and generates, per loop,
+an OpenCL kernel/host split.  Here a *region* is a named compute function with
+one or more *variants*:
+
+* ``ref``     — the loop-faithful / plain-XLA implementation (the "CPU host"
+                side; always present, used as the oracle),
+* ``offload`` — the restructured high-performance implementation (vectorized /
+                fused — what the Pallas kernel computes), timeable on any
+                backend,
+* ``pallas``  — the Pallas TPU kernel itself (validated with interpret=True
+                on CPU; the deploy target on real hardware).
+
+An *offload pattern* (paper §3.3) is a mapping ``{region -> variant}``;
+the planner searches over patterns.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def register_variant(region: str, variant: str) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        REGISTRY.setdefault(region, {})[variant] = fn
+        return fn
+    return deco
+
+
+def variants(region: str) -> dict[str, Callable]:
+    return dict(REGISTRY.get(region, {}))
+
+
+def region_names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+class Impl(dict):
+    """A chosen offload pattern: region name -> variant name (default 'ref')."""
+
+    def pick(self, region: str) -> str:
+        return self.get(region, "ref")
+
+    def describe(self) -> str:
+        on = {k: v for k, v in self.items() if v != "ref"}
+        return "+".join(f"{k}={v}" for k, v in sorted(on.items())) or "all-ref"
+
+
+def dispatch(region: str, impl: Optional[Impl], *args, **kwargs):
+    choice = impl.pick(region) if impl else "ref"
+    table = REGISTRY.get(region)
+    if table is None:
+        raise KeyError(f"unknown region {region!r}")
+    if choice not in table:
+        raise KeyError(f"region {region!r} has no variant {choice!r}; has {sorted(table)}")
+    return table[choice](*args, **kwargs)

@@ -1,0 +1,50 @@
+"""Verification-environment measurement (paper Step 4 executor).
+
+The paper compiles each candidate pattern for the FPGA (~3 h) and runs the
+app's sample benchmark.  Here a pattern compiles in seconds and runs on the
+available backend; the *structure* (bounded number of measured patterns,
+best-of-measured selection) is identical.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Measurement:
+    pattern: str
+    compile_seconds: float
+    run_seconds: float          # median of reps
+    runs: list[float]
+    ok: bool = True
+    error: str = ""
+
+
+def _block(tree) -> None:
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def time_callable(fn, args, *, warmup: int = 1, reps: int = 5,
+                  pattern: str = "") -> Measurement:
+    try:
+        jitted = jax.jit(fn)
+        t0 = time.time()
+        _block(jitted(*args))            # compile + first run
+        compile_s = time.time() - t0
+        for _ in range(max(warmup - 1, 0)):
+            _block(jitted(*args))
+        runs = []
+        for _ in range(reps):
+            t = time.time()
+            _block(jitted(*args))
+            runs.append(time.time() - t)
+        return Measurement(pattern, compile_s, float(np.median(runs)), runs)
+    except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
+        return Measurement(pattern, 0.0, float("inf"), [], False,
+                           f"{type(e).__name__}: {e}")

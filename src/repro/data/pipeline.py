@@ -1,0 +1,96 @@
+"""Deterministic synthetic LM data pipeline.
+
+Production shape without production data: a seeded, stateful, *checkpointable*
+iterator that yields already-sharded global batches.  Sequences are Zipf-ish
+token streams with enough structure that cross-entropy demonstrably falls
+during the example training runs (markov-style bigram bias), which is what
+the integration tests assert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class DataState:
+    """Checkpointable pipeline position."""
+    seed: int
+    step: int
+
+
+class SyntheticLM:
+    """Yields {'tokens': [B, S]} (+frontend stubs) deterministically.
+
+    The stream for a given (seed, step) is identical across restarts and
+    across host counts — resharding-safe by construction."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.state = DataState(seed=seed, step=0)
+        # fixed bigram structure so the loss has something to learn
+        rng = np.random.default_rng(seed)
+        v = min(cfg.vocab_size, 512)
+        self._v = v
+        self._next_tok = rng.integers(0, v, size=v).astype(np.int32)
+
+    def _batch_for(self, step: int) -> dict:
+        key = jax.random.PRNGKey(self.state.seed * 1_000_003 + step)
+        kt, kn, kf = jax.random.split(key, 3)
+        # 80% bigram-following tokens, 20% noise
+        start = jax.random.randint(kt, (self.batch, 1), 0, self._v, jnp.int32)
+        noise = jax.random.randint(kn, (self.batch, self.seq), 0, self._v, jnp.int32)
+        use_noise = jax.random.bernoulli(kf, 0.2, (self.batch, self.seq))
+        table = jnp.asarray(self._next_tok)
+
+        def step_fn(carry, inp):
+            nz, un = inp
+            nxt = jnp.where(un, nz, table[carry])
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step_fn, start[:, 0],
+                               (noise.T, use_noise.T))
+        tokens = jnp.concatenate([start, toks.T], axis=1)[:, :self.seq]
+        out = {"tokens": tokens}
+        if self.cfg.frontend == "siglip_stub":
+            out["patches"] = jax.random.normal(
+                kf, (self.batch, self.cfg.frontend_seq, self.cfg.frontend_dim),
+                jnp.bfloat16)
+        elif self.cfg.frontend == "audio_stub":
+            out["frames"] = jax.random.normal(
+                kf, (self.batch, self.cfg.frontend_seq, self.cfg.frontend_dim),
+                jnp.bfloat16)
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        b = self._batch_for(self.state.step)
+        self.state.step += 1
+        return b
+
+    # -- checkpoint integration -----------------------------------------
+    def state_dict(self) -> dict:
+        return {"seed": self.state.seed, "step": self.state.step}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = DataState(seed=int(d["seed"]), step=int(d["step"]))
+
+
+def shard_batch(batch: dict, mesh, pcfg) -> dict:
+    """Device-put a host batch with the standard batch shardings."""
+    from repro.parallel.rules import batch_shardings
+
+    shardings = batch_shardings(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch),
+        mesh, pcfg)
+    return jax.tree.map(jax.device_put, batch, shardings)

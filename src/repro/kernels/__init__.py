@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Layout per the repo convention: <name>.py holds the pl.pallas_call +
+BlockSpec tiling; ops.py the jit'd wrappers (+ planner region registration);
+ref.py the pure-jnp oracles."""

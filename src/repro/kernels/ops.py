@@ -1,0 +1,70 @@
+"""Public jit'd kernel wrappers + registration of the `pallas` region
+variants for the offload planner.
+
+``INTERPRET`` defaults to True (this container is CPU-only; Mosaic lowering
+needs a real TPU).  On TPU deploys set ``repro.kernels.ops.INTERPRET = False``
+or the REPRO_PALLAS_INTERPRET=0 env var.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import register_variant
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fir import fir_filter_bank
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mriq import mriq_compute_q
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssm_scan
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+# ---------------------------------------------------------------------------
+# Model-region pallas variants
+# ---------------------------------------------------------------------------
+@register_variant("attn_core", "pallas")
+def attn_core_pallas(q, k, v, *, causal=True, window=0):
+    s = q.shape[2]
+    bq = 256 if s % 256 == 0 else (s if s <= 256 else 8)
+    bk = 512 if s % 512 == 0 else (s if s <= 512 else 8)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=bq, block_k=bk, interpret=INTERPRET)
+
+
+@register_variant("rglru_scan", "pallas")
+def rglru_scan_pallas(a, b, h0):
+    bc = 128 if a.shape[-1] % 128 == 0 else a.shape[-1]
+    tc = 128 if a.shape[1] % 128 == 0 else a.shape[1]
+    h_all, h_f = rglru_scan(a, b, h0, block_c=bc, time_chunk=tc,
+                            interpret=INTERPRET)
+    return h_all, h_f
+
+
+@register_variant("ssm_scan", "pallas")
+def ssm_scan_pallas(a, bx, c, h0):
+    bc = 128 if a.shape[2] % 128 == 0 else a.shape[2]
+    tc = 64 if a.shape[1] % 64 == 0 else a.shape[1]
+    return ssm_scan(a, bx, c, h0, block_c=bc, time_chunk=tc,
+                    interpret=INTERPRET)
+
+
+@register_variant("rmsnorm", "pallas")
+def rmsnorm_pallas(x, w, eps=1e-6):
+    return rmsnorm(x, w, eps=eps, interpret=INTERPRET)
+
+
+@register_variant("decode_attn", "pallas")
+def decode_attn_pallas(q, k_cache, v_cache, slot_pos, cur_pos, *, window=0):
+    s = k_cache.shape[2]
+    bk = 512 if s % 512 == 0 else (128 if s % 128 == 0 else s)
+    return decode_attention(q, k_cache, v_cache, slot_pos, cur_pos,
+                            window=window, block_k=bk, interpret=INTERPRET)
+
+
+__all__ = ["decode_attention", "fir_filter_bank", "flash_attention",
+           "mriq_compute_q", "rglru_scan", "rmsnorm", "ssm_scan", "INTERPRET"]

@@ -1,0 +1,154 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *loop-faithful* to the C originals where the kernel reproduces a
+paper app (tdFIR, MRI-Q), and math-identical references for the model
+kernels (flash attention, RG-LRU scan, SSM scan, RMSNorm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# tdFIR
+# ---------------------------------------------------------------------------
+def fir_ref(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Causal complex FIR bank.  x: [M, N] c64; h: [M, K] c64 -> [M, N]."""
+    m, n = x.shape
+    _, k = h.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0)))
+
+    def tap(j, acc):
+        # tap j multiplies x[n - j] => padded index n + k - 1 - j
+        sl = jax.lax.dynamic_slice(xp, (0, k - 1 - j), (m, n))
+        return acc + h[:, j][:, None] * sl
+
+    return jax.lax.fori_loop(0, k, tap, jnp.zeros((m, n), x.dtype))
+
+
+def fir_ref_loopy(x: np.ndarray, h: np.ndarray) -> np.ndarray:
+    """NumPy triple-loop — structured like the HPEC C code (oracle's oracle,
+    small sizes only)."""
+    m, n = x.shape
+    _, k = h.shape
+    y = np.zeros((m, n), np.complex64)
+    for b in range(m):                 # filter-bank loop
+        for i in range(n):             # output-sample loop
+            acc = 0j
+            for j in range(k):         # tap loop
+                if i - j >= 0:
+                    acc += h[b, j] * x[b, i - j]
+            y[b, i] = acc
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MRI-Q
+# ---------------------------------------------------------------------------
+def mriq_ref(x: jax.Array, y: jax.Array, z: jax.Array, kx: jax.Array,
+             ky: jax.Array, kz: jax.Array, phi_mag: jax.Array,
+             chunk: int = 1024):
+    """Parboil MRI-Q computeQ.  Voxels x,y,z: [numX]; k-space kx,ky,kz,
+    phiMag: [numK].  Returns (Q_re [numX], Q_im [numX])."""
+    num_k = kx.shape[0]
+    chunk = min(chunk, num_k)
+    pad = (-num_k) % chunk
+    kxp = jnp.pad(kx, (0, pad))
+    kyp = jnp.pad(ky, (0, pad))
+    kzp = jnp.pad(kz, (0, pad))
+    pmp = jnp.pad(phi_mag, (0, pad))
+    nc = (num_k + pad) // chunk
+
+    def body(c, acc):
+        qr, qi = acc
+        s = c * chunk
+        kxc = jax.lax.dynamic_slice(kxp, (s,), (chunk,))
+        kyc = jax.lax.dynamic_slice(kyp, (s,), (chunk,))
+        kzc = jax.lax.dynamic_slice(kzp, (s,), (chunk,))
+        pmc = jax.lax.dynamic_slice(pmp, (s,), (chunk,))
+        phase = 2.0 * jnp.pi * (jnp.outer(x, kxc) + jnp.outer(y, kyc)
+                                + jnp.outer(z, kzc))
+        qr = qr + jnp.cos(phase) @ pmc
+        qi = qi + jnp.sin(phase) @ pmc
+        return qr, qi
+
+    zero = jnp.zeros(x.shape, jnp.float32)
+    return jax.lax.fori_loop(0, nc, body, (zero, zero))
+
+
+def mriq_ref_loopy(x, y, z, kx, ky, kz, phi_mag):
+    """NumPy double-loop, structured like the Parboil C code."""
+    qr = np.zeros(x.shape[0], np.float32)
+    qi = np.zeros(x.shape[0], np.float32)
+    for i in range(x.shape[0]):        # voxel loop
+        for j in range(kx.shape[0]):   # k-space sample loop
+            ph = 2.0 * np.pi * (kx[j] * x[i] + ky[j] * y[i] + kz[j] * z[i])
+            qr[i] += phi_mag[j] * np.cos(ph)
+            qi[i] += phi_mag[j] * np.sin(ph)
+    return qr, qi
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (causal / windowed, GQA)
+# ---------------------------------------------------------------------------
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                  window: int = 0) -> jax.Array:
+    """Dense softmax attention oracle.  q: [B,Hq,S,D], k/v: [B,Hkv,S,D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU / SSM scans (sequential oracles)
+# ---------------------------------------------------------------------------
+def rglru_scan_seq(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Step-by-step linear recurrence.  a, b: [B,S,D]; h0: [B,D]."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+    a_s = jnp.moveaxis(a, 1, 0)
+    b_s = jnp.moveaxis(b, 1, 0)
+    h_f, hs = jax.lax.scan(step, h0, (a_s, b_s))
+    return jnp.moveaxis(hs, 0, 1), h_f
+
+
+def ssm_scan_seq(a: jax.Array, bx: jax.Array, c: jax.Array, h0: jax.Array):
+    """Step-by-step selective scan.  a, bx: [B,S,D,N]; c: [B,S,N]."""
+    def step(h, inp):
+        a_t, bx_t, c_t = inp
+        h = a_t * h + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+    a_s = jnp.moveaxis(a, 1, 0)
+    b_s = jnp.moveaxis(bx, 1, 0)
+    c_s = jnp.moveaxis(c, 1, 0)
+    h_f, ys = jax.lax.scan(step, h0, (a_s, b_s, c_s))
+    return jnp.moveaxis(ys, 0, 1), h_f
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)

@@ -1,0 +1,74 @@
+"""RG-LRU linear-recurrence Pallas kernel (recurrentgemma).
+
+h_t = a_t * h_{t-1} + b_t, diagonal over channels.  Grid: (batch, channel
+blocks); the kernel walks time sequentially in VMEM (the recurrence is
+latency-bound, not MXU work — on TPU the win is keeping the whole [T, bc]
+tile resident in VMEM instead of T separate HBM round-trips, exactly the
+Griffin production approach).  Channel blocks are lane-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
+                  time_chunk: int):
+    h = h0_ref[0].astype(jnp.float32)                      # [bc]
+
+    def chunk_body(tc, h):
+        a_c = pl.load(a_ref, (0, pl.ds(tc * time_chunk, time_chunk),
+                              slice(None))).astype(jnp.float32)
+        b_c = pl.load(b_ref, (0, pl.ds(tc * time_chunk, time_chunk),
+                              slice(None))).astype(jnp.float32)
+
+        def step(t, carry):
+            h, out = carry
+            h = a_c[t] * h + b_c[t]
+            out = jax.lax.dynamic_update_index_in_dim(out, h, t, 0)
+            return h, out
+
+        out0 = jnp.zeros((time_chunk, h.shape[-1]), jnp.float32)
+        h, out = jax.lax.fori_loop(0, time_chunk, step, (h, out0))
+        pl.store(y_ref, (0, pl.ds(tc * time_chunk, time_chunk), slice(None)),
+                 out.astype(y_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len // time_chunk, chunk_body, h)
+    hf_ref[0] = h.astype(hf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "time_chunk", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *, block_c: int = 128,
+               time_chunk: int = 128, interpret: bool = True):
+    """a, b: [B, S, D]; h0: [B, D] -> (h_all [B, S, D], h_final [B, D]).
+
+    VMEM per step: 2 * time_chunk * block_c * 4B (a, b chunks) + carry."""
+    bsz, s, d = a.shape
+    block_c = min(block_c, d)
+    time_chunk = min(time_chunk, s)
+    assert d % block_c == 0 and s % time_chunk == 0
+
+    grid = (bsz, d // block_c)
+    y, hf = pl.pallas_call(
+        functools.partial(_rglru_kernel, seq_len=s, time_chunk=time_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s, block_c), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, s, block_c), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, block_c), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), a.dtype),
+            jax.ShapeDtypeStruct((bsz, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hf

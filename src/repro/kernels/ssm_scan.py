@@ -1,0 +1,84 @@
+"""Mamba-1 selective-scan Pallas kernel (falcon-mamba).
+
+h_t[c, n] = a_t[c, n] * h_{t-1}[c, n] + bx_t[c, n];  y_t[c] = h_t[c, :] @ c_t
+
+Grid: (batch, channel blocks).  States [bc, N] stay in VMEM for the whole
+sequence; time advances sequentially in chunks.  TPU adaptation of the
+paper's loop-offload idea for an attention-free arch: the scan loop is the
+arch's hottest loop statement, and VMEM residency of the state is what the
+FPGA implementation would get from BRAM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
+                time_chunk: int, n_state: int):
+    h = h0_ref[0].astype(jnp.float32)                      # [bc, N]
+
+    def chunk_body(tc, h):
+        t0 = tc * time_chunk
+        a_c = pl.load(a_ref, (0, pl.ds(t0, time_chunk), slice(None),
+                              slice(None))).astype(jnp.float32)   # [T, bc, N]
+        bx_c = pl.load(bx_ref, (0, pl.ds(t0, time_chunk), slice(None),
+                                slice(None))).astype(jnp.float32)
+        c_c = pl.load(c_ref, (0, pl.ds(t0, time_chunk),
+                              slice(None))).astype(jnp.float32)   # [T, N]
+
+        def step(t, carry):
+            h, ys = carry
+            h = a_c[t] * h + bx_c[t]                       # [bc, N]
+            y = jnp.sum(h * c_c[t][None, :], axis=-1)      # [bc]
+            ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+            return h, ys
+
+        ys0 = jnp.zeros((time_chunk, h.shape[0]), jnp.float32)
+        h, ys = jax.lax.fori_loop(0, time_chunk, step, (h, ys0))
+        pl.store(y_ref, (0, pl.ds(t0, time_chunk), slice(None)),
+                 ys.astype(y_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len // time_chunk, chunk_body, h)
+    hf_ref[0] = h.astype(hf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "time_chunk", "interpret"))
+def ssm_scan(a: jax.Array, bx: jax.Array, c: jax.Array, h0: jax.Array, *,
+             block_c: int = 128, time_chunk: int = 64, interpret: bool = True):
+    """a, bx: [B, S, D, N]; c: [B, S, N]; h0: [B, D, N].
+    Returns (y [B, S, D], h_final [B, D, N]).
+
+    VMEM per step: 2 * time_chunk * block_c * N * 4B ~= 2*64*128*16*4 = 8 MB
+    at the defaults — sized to the 16 MiB VMEM budget."""
+    bsz, s, d, n = a.shape
+    block_c = min(block_c, d)
+    time_chunk = min(time_chunk, s)
+    assert d % block_c == 0 and s % time_chunk == 0
+
+    grid = (bsz, d // block_c)
+    y, hf = pl.pallas_call(
+        functools.partial(_ssm_kernel, seq_len=s, time_chunk=time_chunk,
+                          n_state=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s, block_c, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, block_c, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_c, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, block_c), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_c, n), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), a.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, bx, c, h0)
+    return y, hf

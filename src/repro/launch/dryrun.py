@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+import sys  # noqa: E402
+
+if "--devices" in sys.argv:  # test override, still before jax import
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (no GSPMD
+errors), (b) the program compiles for the production mesh, and records
+(c) memory_analysis / cost_analysis / collective bytes for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --all                 # all cells, both meshes
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --arch whisper-small --shape train_4k \
+      --devices 8 --mesh-shape 4,2 --reduced   # CI-sized smoke
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch import shardings as SH                                  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo                         # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.models import factory as F                                     # noqa: E402
+from repro.parallel.ctx import parallel_context                           # noqa: E402
+from repro.parallel.presets import parallelism_for                        # noqa: E402
+from repro.runtime import steps as RS                                     # noqa: E402
+
+
+def build_mesh(mesh_kind: str, mesh_shape: str | None):
+    if mesh_shape:
+        dims = tuple(int(x) for x in mesh_shape.split(","))
+        axes = ("pod", "data", "model")[-len(dims):] if len(dims) == 3 else ("data", "model")
+        return jax.make_mesh(dims, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               mesh_shape: str | None = None, reduced: bool = False,
+               pcfg_override: dict | None = None, save_hlo: str | None = None,
+               impl_override: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "reduced": reduced}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", why=why)
+        return rec
+
+    mesh = build_mesh(mesh_kind, mesh_shape)
+    model_axis = mesh.shape.get("model", 1)
+    pcfg = parallelism_for(cfg, shape, model_axis=model_axis)
+    if pcfg_override:
+        import dataclasses
+        real = {k: v for k, v in pcfg_override.items() if not k.startswith("_")}
+        if real:
+            pcfg = dataclasses.replace(pcfg, **real)
+    rec["devices"] = int(np.prod(list(mesh.shape.values())))
+    rec["pcfg"] = {"tp": pcfg.tp, "fsdp": pcfg.fsdp, "remat": pcfg.remat,
+                   "microbatch": pcfg.microbatch, "sp": pcfg.sp}
+    from repro.core.regions import Impl
+    from repro.models.factory import default_impl
+    impl = default_impl(cfg)
+    if impl_override:
+        impl = Impl({**impl, **impl_override})
+        rec["impl"] = dict(impl)
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            step = RS.make_train_step(cfg, pcfg, impl=impl)
+            state_abs = RS.abstract_train_state(cfg)
+            batch_abs = F.batch_spec(cfg, shape)
+            in_sh, out_sh = SH.train_shardings(cfg, shape, mesh, pcfg)
+            with mesh, parallel_context(mesh, pcfg):
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            ctx = shape.seq_len + (cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0)
+            step = RS.make_prefill_step(cfg, ctx=ctx, impl=impl)
+            params_abs = F.abstract_params(cfg)
+            batch_abs = F.batch_spec(cfg, shape)
+            in_sh, out_sh = SH.prefill_shardings(cfg, shape, mesh, pcfg)
+            with mesh, parallel_context(mesh, pcfg):
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+                lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            quant = bool(pcfg_override and pcfg_override.get("_quant"))
+            cache_abs = F.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            specs = F.input_specs(cfg, shape)
+            in_sh, out_sh = SH.serve_shardings(cfg, shape, mesh, pcfg)
+            if quant:
+                from repro.models import lm as _lm
+                from repro.models import params as _P
+                from repro.optim.quantize import quantized_template
+                from repro.parallel.rules import tree_shardings
+                step = F.make_quantized_serve_step(cfg, impl=impl)
+                qtmpl = quantized_template(_lm.model_template(cfg))
+                params_abs = _P.abstract(qtmpl)
+                in_sh = (tree_shardings(qtmpl, mesh, pcfg),) + tuple(in_sh[1:])
+                rec["quant_weights"] = True
+            else:
+                step = RS.make_serve_step(cfg, impl=impl)
+                params_abs = F.abstract_params(cfg)
+            with mesh, parallel_context(mesh, pcfg):
+                jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                                 donate_argnums=(1,) if pcfg.donate_cache else ())
+                lowered = jitted.lower(params_abs, cache_abs, specs["tokens"],
+                                       specs["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "transcendentals", "bytes accessed",
+                             "bytes accessed output", "optimal_seconds")}
+        text = compiled.as_text()
+        hc = analyze_hlo(text)
+        rec["hlo_cost"] = hc.to_json()     # per-device, trip-attributed
+        rec["collectives"] = {"bytes": hc.collective_bytes,
+                              "counts": hc.collective_counts,
+                              "total_bytes": hc.total_collective_bytes}
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(text)
+        rec["hlo_lines"] = text.count("\n")
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def already_done(out_path: str) -> set[tuple[str, str, str]]:
+    done = set()
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skip"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="all cells, both meshes")
+    ap.add_argument("--devices", default=None, help="(consumed pre-import)")
+    ap.add_argument("--mesh-shape", default=None, help="e.g. 4,2 or 2,2,2")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "dots", "full", "2level"])
+    ap.add_argument("--impl", default=None,
+                    help="region=variant[,region=variant] offload override")
+    ap.add_argument("--quant-weights", action="store_true",
+                    help="int8 weight quantization (decode cells)")
+    ap.add_argument("--sp", default=None, choices=["on", "off"])
+    args = ap.parse_args()
+
+    over = {}
+    if args.fsdp:
+        over["fsdp"] = args.fsdp == "on"
+    if args.microbatch is not None:
+        over["microbatch"] = args.microbatch
+    if args.remat:
+        over["remat"] = args.remat
+    if args.sp:
+        over["sp"] = args.sp == "on"
+    impl_over = None
+    if args.impl:
+        impl_over = dict(kv.split("=") for kv in args.impl.split(","))
+    if args.quant_weights:
+        over["_quant"] = True
+
+    cells: list[tuple[str, str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        archs = [args.arch] if args.arch else list(ARCH_IDS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for arch in archs:
+            for shape in shapes:
+                cells.append((arch, shape, args.mesh))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = already_done(args.out) if args.resume else set()
+    with open(args.out, "a") as f:
+        for arch, shape, mesh in cells:
+            if (arch, shape, mesh) in done:
+                print(f"[dryrun] SKIP (done) {arch} {shape} {mesh}", flush=True)
+                continue
+            print(f"[dryrun] {arch} {shape} {mesh} ...", flush=True)
+            rec = lower_cell(arch, shape, mesh, mesh_shape=args.mesh_shape,
+                             reduced=args.reduced, pcfg_override=over or None,
+                             save_hlo=args.save_hlo, impl_override=impl_over)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            status = rec["status"]
+            extra = rec.get("why") or rec.get("error", "")
+            print(f"[dryrun]   -> {status} ({rec.get('total_s', 0)}s) {extra}",
+                  flush=True)
+    print("[dryrun] done")
+
+
+if __name__ == "__main__":
+    main()

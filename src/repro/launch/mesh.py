@@ -1,0 +1,21 @@
+"""Mesh builders.  Functions, not module constants — importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16x16 = 256 chips per pod; 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests only."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

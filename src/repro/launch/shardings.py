@@ -1,0 +1,74 @@
+"""Assemble in/out shardings for every step type on a concrete mesh."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import factory as F
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel.rules import (ParallelismConfig, batch_shardings,
+                                  data_axes, partition_spec, replicated,
+                                  tree_shardings)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelismConfig):
+    return tree_shardings(lm.model_template(cfg), mesh, pcfg, kind="weight")
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelismConfig):
+    p_sh = param_shardings(cfg, mesh, pcfg)
+    rep = replicated(mesh)
+    return {"params": p_sh, "opt": {"m": p_sh, "v": p_sh, "count": rep},
+            "step": rep}
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelismConfig,
+                    batch: int, ctx: int):
+    return tree_shardings(lm.cache_template(cfg, batch, ctx), mesh, pcfg,
+                          kind="cache")
+
+
+def logits_sharding(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelismConfig,
+                    batch: int):
+    spec = partition_spec((batch, 1, cfg.vocab_size),
+                          ("batch", None, "vocab"), mesh, pcfg, kind="act")
+    return NamedSharding(mesh, spec)
+
+
+def metrics_shardings(mesh: Mesh):
+    rep = replicated(mesh)
+    return {"loss": rep, "lr": rep, "grad_norm": rep}
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    pcfg: ParallelismConfig):
+    state_sh = train_state_shardings(cfg, mesh, pcfg)
+    batch_sh = batch_shardings(F.batch_spec(cfg, shape), mesh, pcfg)
+    return (state_sh, batch_sh), (state_sh, metrics_shardings(mesh))
+
+
+def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      pcfg: ParallelismConfig):
+    b, s = shape.global_batch, shape.seq_len
+    p_sh = param_shardings(cfg, mesh, pcfg)
+    batch_sh = batch_shardings(F.batch_spec(cfg, shape), mesh, pcfg)
+    ctx = s + (cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0)
+    cache_sh = cache_shardings(cfg, mesh, pcfg, b, ctx)
+    out = (logits_sharding(cfg, mesh, pcfg, b), cache_sh)
+    return (p_sh, batch_sh), out
+
+
+def serve_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    pcfg: ParallelismConfig):
+    b, s = shape.global_batch, shape.seq_len
+    p_sh = param_shardings(cfg, mesh, pcfg)
+    cache_sh = cache_shardings(cfg, mesh, pcfg, b, s)
+    tok_sh = batch_shardings(
+        {"tokens": jax.ShapeDtypeStruct((b, 1), np.int32),
+         "pos": jax.ShapeDtypeStruct((b,), np.int32)}, mesh, pcfg)
+    in_sh = (p_sh, cache_sh, tok_sh["tokens"], tok_sh["pos"])
+    out_sh = (logits_sharding(cfg, mesh, pcfg, b), cache_sh)
+    return in_sh, out_sh

@@ -1,0 +1,201 @@
+"""Core layer math, pure JAX.
+
+Every compute-heavy function here is an *offloadable region* in the paper's
+sense: the planner can swap its ``ref`` implementation for a Pallas kernel
+variant (see ``repro.core.regions``).  The reference implementations are
+written to be XLA-memory-sane at 32k context (chunked online-softmax
+attention, no [S, S] materialization).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                       # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, head_dim]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (region: "attn_core")
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,                 # [B, Hq, Sq, D]
+    k: jax.Array,                 # [B, Hkv, Sk, D]
+    v: jax.Array,                 # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,              # 0 = unlimited; else sliding window size
+    q_offset: int | jax.Array = 0,  # absolute position of q[0]
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp, O(q_chunk*k_chunk)
+    working set.  GQA: Hq must be a multiple of Hkv."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad to chunk multiples
+    sq_p = -(-sq // q_chunk) * q_chunk
+    sk_p = -(-sk // k_chunk) * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    nq, nk = sq_p // q_chunk, sk_p // k_chunk
+
+    qp = qp.reshape(b, hkv, g, nq, q_chunk, d)
+    kp = kp.reshape(b, hkv, nk, k_chunk, d)
+    vp = vp.reshape(b, hkv, nk, k_chunk, d)
+    scale = 1.0 / np.sqrt(d)
+
+    def q_body(_, iq):
+        qc = qp[:, :, :, iq] * scale                        # [B,Hkv,G,qc,D]
+        # re-assert sequence sharding inside the chunk loop: the (nq, qc)
+        # reshape above can break GSPMD propagation when nq doesn't divide
+        # the model axis (e.g. 33024-token VLM prefill -> 65 chunks)
+        from repro.parallel.ctx import constrain, heads_shardable
+        if not heads_shardable(hkv * g):
+            qc = constrain(qc, ("batch", None, None, "act_seq", None))
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def k_body(carry, ik):
+            m, l, acc = carry
+            kc = kp[:, :, ik]                               # [B,Hkv,kc,D]
+            vc = vp[:, :, ik]
+            k_pos = ik * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            mask = (k_pos[None, :] < sk)                    # padding mask
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))    # [nq,B,Hkv,G,qc,D]
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq_p, d)[:, :, :, :sq]
+    return out.reshape(b, hq, sq, d)
+
+
+def decode_attention(
+    q: jax.Array,                 # [B, Hq, 1, D]
+    k_cache: jax.Array,           # [B, Hkv, S, D]
+    v_cache: jax.Array,           # [B, Hkv, S, D]
+    slot_pos: jax.Array,          # [B, S] absolute position per cache slot (-1 = empty)
+    cur_pos: jax.Array,           # [B] current absolute position
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (possibly rotating) KV cache."""
+    b, hq, _, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d) / np.sqrt(d)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window:
+        valid = valid & (slot_pos > cur_pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (region: "mlp")
+# ---------------------------------------------------------------------------
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up, w_down: jax.Array, b_down) -> jax.Array:
+    h = jax.nn.gelu(x @ w_up + b_up)
+    return h @ w_down + b_down
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (regions: "embed", "logits")
+# ---------------------------------------------------------------------------
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table_or_w: jax.Array, tied: bool) -> jax.Array:
+    xf = x.astype(jnp.bfloat16)
+    if tied:
+        return jnp.einsum("...d,vd->...v", xf, table_or_w,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,dv->...v", xf, table_or_w,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache helpers
+# ---------------------------------------------------------------------------
+def cache_update(k_cache, v_cache, slot_pos, k_new, v_new, pos, window: int = 0):
+    """Write one token's k/v into the cache; rotating when windowed.
+
+    k_cache/v_cache: [B, Hkv, S, D]; k_new/v_new: [B, Hkv, 1, D]; pos: [B]."""
+    s = k_cache.shape[2]
+    slot = jnp.where(window > 0, pos % s, jnp.minimum(pos, s - 1))  # [B]
+    b = k_cache.shape[0]
+    bi = jnp.arange(b)
+    k_cache = k_cache.at[bi, :, slot].set(k_new[:, :, 0])
+    v_cache = v_cache.at[bi, :, slot].set(v_new[:, :, 0])
+    slot_pos = slot_pos.at[bi, slot].set(pos)
+    return k_cache, v_cache, slot_pos

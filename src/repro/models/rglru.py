@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma).
+
+Recurrence (per channel, diagonal):
+    r_t = sigmoid(block_diag(W_a) x_t)            # recurrence gate
+    i_t = sigmoid(block_diag(W_x) x_t)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block structure (Griffin recurrent block): in-proj to (branch, gate),
+causal depthwise conv(4) on the branch, RG-LRU, GeLU(gate) multiply, out-proj.
+The scan is an offloadable region ("rglru_scan") — state is [B, d_rnn]
+(diagonal), so the associative-scan elements are [B, S, d_rnn]: light enough
+to scan whole sequences, chunked anyway for symmetry with the SSM path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import dispatch, register_variant
+from repro.models.ssm import causal_depthwise_conv
+
+RGLRU_C = 8.0
+
+
+def _assoc_combine(l, r):
+    a_l, b_l = l
+    a_r, b_r = r
+    return a_l * a_r, b_l * a_r + b_r
+
+
+@register_variant("rglru_scan", "ref")
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int = 512):
+    """a, b: [B, S, D]; h0: [B, D].  Returns (h_all [B, S, D], h_final)."""
+    bsz, s, d = a.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    a = jnp.moveaxis(a.reshape(bsz, nc, chunk, d), 1, 0)
+    b = jnp.moveaxis(b.reshape(bsz, nc, chunk, d), 1, 0)
+
+    def body(h, inp):
+        a_c, b_c = inp
+        cum_a, cum_b = jax.lax.associative_scan(_assoc_combine, (a_c, b_c), axis=1)
+        h_t = cum_a * h[:, None] + cum_b
+        return h_t[:, -1], h_t
+
+    h_f, ys = jax.lax.scan(body, h0, (a, b))
+    h_all = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, d)[:, :s]
+    return h_all, h_f
+
+
+@register_variant("rglru_scan", "offload")
+def rglru_scan_offload(a, b, h0, chunk: int = 2048):
+    """fp32, bigger chunks — what the Pallas kernel implements."""
+    h_all, h_f = rglru_scan_ref(a.astype(jnp.float32), b.astype(jnp.float32),
+                                h0.astype(jnp.float32), chunk=chunk)
+    return h_all.astype(a.dtype), h_f
+
+
+def _block_diag_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [..., D]; w: [G, D/G, D/G] block-diagonal."""
+    g, dg, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (g, dg))
+    out = jnp.einsum("...gi,gio->...go", xs, w)
+    return out.reshape(x.shape)
+
+
+def rglru_gates(params, x: jax.Array):
+    """Returns (a [B,S,D] decay, b [B,S,D] input) in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_matmul(xf, params["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag_matmul(xf, params["w_x"].astype(jnp.float32)))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1-a^2 = -expm1(2 log_a)
+    mult = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = mult * (i * xf)
+    return a, b
+
+
+def rglru_block(params, x, *, cfg, impl=None, state=None):
+    """Griffin recurrent block.  x: [B, S, D_model] -> (y, new_state)."""
+    branch = x @ params["w_branch"]                            # [B, S, d_rnn]
+    gate = x @ params["w_gate"]
+    conv_state = None if state is None else state["conv"]
+    branch, new_conv = causal_depthwise_conv(branch, params["conv_w"], conv_state)
+    a, b = rglru_gates(params, branch)
+    h0 = (jnp.zeros((x.shape[0], branch.shape[-1]), jnp.float32)
+          if state is None else state["h"].astype(jnp.float32))
+    h_all, h_f = dispatch("rglru_scan", impl, a.astype(x.dtype), b.astype(x.dtype), h0)
+    y = h_all.astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ params["w_out"]
+    return out.astype(x.dtype), {"conv": new_conv, "h": h_f.astype(jnp.float32)}
+
+
+def rglru_decode_step(params, x, state, *, cfg, impl=None):
+    """x: [B, 1, D_model]; state: dict(conv, h [B, d_rnn])."""
+    branch = x @ params["w_branch"]
+    gate = x @ params["w_gate"]
+    branch, new_conv = causal_depthwise_conv(branch, params["conv_w"], state["conv"])
+    a, b = rglru_gates(params, branch)                         # [B, 1, D]
+    h_new = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = h_new[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ params["w_out"]
+    return out.astype(x.dtype), {"conv": new_conv, "h": h_new}

@@ -1,0 +1,72 @@
+"""Activation sharding constraints via an ambient parallel context.
+
+Model code is mesh-agnostic; the launcher (dry-run / train loop / server)
+installs a ``parallel_context(mesh, pcfg)`` around tracing, and layers call
+``constrain(x, logical_axes)`` at the few points where GSPMD propagation
+alone picks a bad sharding:
+
+* attention with head counts not divisible by the model axis (phi3: 40H,
+  arctic: 56H, whisper: 12H -> GSPMD replicates the S^2 score computation
+  on every model shard, inflating per-device flops by the axis size).  The
+  fallback constrains the *query sequence* dim to the model axis instead —
+  sequence-parallel attention: each shard computes S/16 of the queries
+  against the full K/V.
+* MoE dispatch tensors (group dim -> data, expert dim -> model).
+* SSM/RG-LRU scan inputs (channel dim -> model).
+
+Outside any context (plain CPU tests) ``constrain`` is the identity.
+"""
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.parallel.rules import ParallelismConfig, partition_spec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_parallel_ctx",
+                                                      default=None)
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    pcfg: ParallelismConfig
+
+    @property
+    def model_axis_size(self) -> int:
+        return self.mesh.shape.get("model", 1)
+
+
+@contextmanager
+def parallel_context(mesh: Mesh, pcfg: ParallelismConfig):
+    token = _CTX.set(ParallelCtx(mesh, pcfg))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> Optional[ParallelCtx]:
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint under the ambient context (identity if none)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = partition_spec(tuple(x.shape), tuple(axes), ctx.mesh, ctx.pcfg,
+                          kind="act")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def heads_shardable(num_heads: int) -> bool:
+    ctx = _CTX.get()
+    if ctx is None:
+        return True
+    return num_heads % ctx.model_axis_size == 0

@@ -1,0 +1,170 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Every ParamSpec carries logical axis names ('embed', 'mlp', 'qkv', ...).
+This module turns a tree of logical-axis tuples into a tree of
+``NamedSharding``s for a concrete mesh, applying:
+
+* DP   — 'batch' -> ('pod', 'data') jointly (or 'data' on a single pod)
+* TP   — weight output/input dims ('mlp', 'qkv', 'vocab', 'experts', ...) -> 'model'
+* FSDP — weight 'embed' dims additionally -> 'data' (ZeRO-3-style)
+* EP   — 'experts' -> 'model' (expert parallelism shares the TP axis)
+* SP   — sequence dim of activations -> 'model' (optional, constraint-based)
+
+A dim maps to a mesh axis only when its size is divisible by the axis size
+and the axis is not already used by another dim of the same tensor; otherwise
+the mapping is skipped (logged) and the dim stays replicated.  This is what
+lets one rule set cover heads=10 (not 16-divisible -> replicated) and
+heads=64 (sharded) without per-arch special cases.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger("repro.parallel")
+
+
+@dataclass(frozen=True)
+class ParallelismConfig:
+    tp: bool = True            # tensor parallelism over 'model'
+    fsdp: bool = False         # shard weight 'embed' dims over 'data'
+    sp: bool = False           # sequence-parallel activation constraints
+    ep: bool = True            # expert parallelism ('experts' -> 'model')
+    remat: str = "dots"        # none | dots | full
+    microbatch: int = 1        # gradient-accumulation steps
+    donate_cache: bool = True
+    opt_dtype: str = "float32"  # adam moment dtype
+
+
+# logical axis -> ordered candidate mesh axes. 'DP' is the joint data axes.
+_PRIMARY: dict[str, tuple[str, ...]] = {
+    "batch": ("DP",),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "expert_mlp": (),          # experts dim already sharded over 'model'
+    "qkv": ("model",),
+    "kv_qkv": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "inner2": ("model",),
+    "rnn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "embed": (),               # FSDP adds 'data' (see below)
+    "frontend": (),
+    "layers": (),
+    "seq": (),
+    "ctx": (),                 # fallback only (see _FALLBACK)
+    "act_seq": ("model",),     # sequence-parallel fallback for attention
+    "act_embed": (),
+}
+# tried only if the dim is still unsharded after the primary pass
+_FALLBACK: dict[str, tuple[str, ...]] = {
+    "ctx": ("model",),         # e.g. qwen2 kv_heads=8 < model=16 -> shard cache seq
+    # intra-expert tensor parallelism when the expert count doesn't divide
+    # the model axis (mixtral: 8e on a 16-way axis would otherwise replicate
+    # every expert FFN -> 16x flops); 'data' covers serve-mode FSDP.
+    "expert_mlp": ("model", "data"),
+}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _resolve(cand: str, mesh: Mesh, pcfg: ParallelismConfig,
+             kind: str) -> Optional[tuple[str, ...]]:
+    """Map a rule candidate to concrete mesh axes (or None if disabled)."""
+    if cand == "DP":
+        axes = data_axes(mesh)
+        return axes or None
+    if cand == "model":
+        if not pcfg.tp:
+            return None
+        if "model" not in mesh.axis_names:
+            return None
+        return ("model",)
+    if cand == "data":
+        if "data" not in mesh.axis_names:
+            return None
+        return data_axes(mesh) if kind == "weight" else ("data",)
+    return None
+
+
+def partition_spec(shape: tuple[int, ...], axes: tuple[Optional[str], ...],
+                   mesh: Mesh, pcfg: ParallelismConfig,
+                   kind: str = "weight") -> P:
+    """Compute the PartitionSpec for one tensor."""
+    entries: list = [None] * len(shape)
+    used: set[str] = set()
+
+    def try_assign(i: int, cands: tuple[str, ...]) -> bool:
+        for cand in cands:
+            concrete = _resolve(cand, mesh, pcfg, kind)
+            if not concrete:
+                continue
+            if any(c in used for c in concrete):
+                continue
+            total = int(np.prod([_axis_size(mesh, c) for c in concrete]))
+            if shape[i] % total != 0:
+                log.debug("fallback: dim %d (%s, size %d) not divisible by %s (%d)",
+                          i, axes[i], shape[i], concrete, total)
+                continue
+            entries[i] = concrete if len(concrete) > 1 else concrete[0]
+            used.update(concrete)
+            return True
+        return False
+
+    for i, ax in enumerate(axes):
+        if ax is None:
+            continue
+        cands = list(_PRIMARY.get(ax, ()))
+        if ax == "embed" and pcfg.fsdp and kind == "weight":
+            cands = ["data"] + cands
+        if try_assign(i, tuple(cands)):
+            continue
+    for i, ax in enumerate(axes):
+        if entries[i] is not None or ax is None:
+            continue
+        try_assign(i, _FALLBACK.get(ax, ()))
+    return P(*entries)
+
+
+def tree_shardings(template, mesh: Mesh, pcfg: ParallelismConfig,
+                   kind: str = "weight"):
+    """NamedSharding tree for a ParamSpec template tree (same structure as the
+    params/cache pytree it describes)."""
+    from repro.models.params import ParamSpec
+
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, partition_spec(s.shape, s.axes, mesh, pcfg, kind))
+    return jax.tree.map(one, template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def batch_shardings(batch_spec_tree, mesh: Mesh, pcfg: ParallelismConfig):
+    """Shard every batch input on dim0 over the joint data axes."""
+    dp = data_axes(mesh)
+
+    def one(s):
+        total = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+        if dp and s.shape and s.shape[0] % total == 0:
+            spec = P(dp if len(dp) > 1 else dp[0], *([None] * (len(s.shape) - 1)))
+        elif "data" in mesh.axis_names and s.shape and s.shape[0] % mesh.shape["data"] == 0:
+            spec = P("data", *([None] * (len(s.shape) - 1)))
+        else:
+            spec = P(*([None] * len(s.shape)))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_spec_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

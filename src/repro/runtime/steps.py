@@ -1,0 +1,85 @@
+"""Step builders: train_step (with gradient-accumulation microbatching),
+prefill_step, serve_step — the functions the launcher jits/lowers."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import Impl
+from repro.models import factory as F
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+from repro.parallel.rules import ParallelismConfig
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelismConfig,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    lr_fn: Optional[Callable] = None,
+                    impl: Optional[Impl] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {'params', 'opt', 'step'}."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(moment_dtype=pcfg.opt_dtype)
+    lr_fn = lr_fn or partial(cosine_with_warmup, peak_lr=3e-4,
+                             warmup_steps=100, total_steps=10_000)
+    loss_fn = F.make_loss(cfg, impl=impl, remat=pcfg.remat)
+    grad_fn = jax.value_and_grad(loss_fn)
+    k = pcfg.microbatch
+
+    def accum_grads(params, batch):
+        if k <= 1:
+            return grad_fn(params, batch)
+        mb = jax.tree.map(lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                          batch)
+
+        def body(carry, microbatch):
+            loss_acc, g_acc = carry
+            loss, g = grad_fn(params, microbatch)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0), mb)
+        grads = jax.tree.map(lambda g, p: (g / k).astype(p.dtype), g_sum, params)
+        return loss_sum / k, grads
+
+    def train_step(state, batch):
+        loss, grads = accum_grads(state["params"], batch)
+        lr = lr_fn(state["step"])
+        new_params, new_opt, om = adamw.update(grads, state["opt"],
+                                               state["params"], lr, opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss.astype(jnp.float32), "lr": lr, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: Optional[Impl] = None,
+                      ctx: Optional[int] = None):
+    return F.make_prefill_step(cfg, impl=impl, ctx=ctx)
+
+
+def make_serve_step(cfg: ModelConfig, impl: Optional[Impl] = None):
+    return F.make_serve_step(cfg, impl=impl)
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None):
+    params = F.init_params(cfg, key)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    return {"params": params, "opt": adamw.init_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         opt_cfg: Optional[adamw.AdamWConfig] = None):
+    ap = F.abstract_params(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    return {"params": ap, "opt": adamw.abstract_state(ap, opt_cfg),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

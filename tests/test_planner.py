@@ -1,0 +1,221 @@
+"""Planner behaviour tests — the paper's §3.3 pipeline invariants, plus
+hypothesis property tests over synthetic programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import mriq, tdfir
+from repro.core.intensity import analyze_region, count_loops
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, register_variant, variants
+from repro.core.resources import VMEM_BUDGET, precompile
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic-intensity analysis
+# ---------------------------------------------------------------------------
+def test_ai_counts_matmul_flops_exactly():
+    f = lambda a, b: a @ b
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)   # lane-aligned dims
+    ana = analyze_region(f, x, w)
+    assert ana.flops == 2 * 64 * 128 * 128
+    assert ana.boundary_bytes == 4 * (64 * 128 + 128 * 128 + 64 * 128)
+
+
+def test_ai_multiplies_scan_trip_count():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)   # lane-aligned
+    ana = analyze_region(f, x)
+    assert ana.flops == 7 * 2 * 128 * 128 * 128
+    assert ana.loop_count == 1
+
+
+def test_count_loops_nested():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d + 1.0, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=2)
+        return y
+    assert count_loops(f, jax.ShapeDtypeStruct((4,), jnp.float32)) == 2
+
+
+def test_alignment_penalty_orders_misaligned_below_aligned():
+    f = lambda a, b: a @ b
+    aligned = analyze_region(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                             jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    tiny = analyze_region(f, jax.ShapeDtypeStruct((128, 7), jnp.float32),
+                          jax.ShapeDtypeStruct((7, 128), jnp.float32))
+    # per-flop discount: compare penalty-adjusted flops over true flops
+    assert tiny.flops / (2 * 128 * 7 * 128) < aligned.flops / (2 * 128**3)
+
+
+# ---------------------------------------------------------------------------
+# Resource estimation
+# ---------------------------------------------------------------------------
+def test_precompile_reports_vmem_and_ops():
+    f = lambda a, b: jax.nn.relu(a @ b)
+    args = (jax.ShapeDtypeStruct((256, 256), jnp.float32),
+            jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    est = precompile("dummy_region", "offload", f, args)
+    assert est.lower_ok
+    assert est.hlo_ops > 0
+    assert 0 < est.vmem_bytes <= 8 * VMEM_BUDGET
+
+
+def test_precompile_failure_is_recorded_not_raised():
+    def bad(a):
+        raise ValueError("no lowering for you")
+    est = precompile("dummy", "offload", bad,
+                     (jax.ShapeDtypeStruct((4,), jnp.float32),))
+    assert not est.lower_ok
+    assert est.resource_fraction == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Planner pipeline invariants on the paper apps
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make", [tdfir.make_program, mriq.make_program])
+def test_planner_respects_budgets(make):
+    prog = make()
+    cfg = PlannerConfig(reps=1, warmup=0)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    assert len(rep.ai_selected) <= cfg.top_a
+    assert len(rep.eff_selected) <= cfg.top_c
+    assert len(rep.measurements) <= cfg.max_measurements
+    assert rep.speedup >= 1.0          # never selects a slowdown
+    assert rep.baseline is not None and rep.baseline.ok
+
+
+def test_planner_ranks_hot_loop_first():
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
+        tdfir.make_program(), jax.random.PRNGKey(0))
+    assert rep.ai_selected[0] == "fir_bank"
+    rep2 = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
+        mriq.make_program(), jax.random.PRNGKey(0))
+    assert rep2.ai_selected[0] == "compute_q"
+
+
+def test_offload_variants_are_numerically_equivalent():
+    """Every measured pattern must compute the same function."""
+    key = jax.random.PRNGKey(1)
+    for make in (tdfir.make_program, mriq.make_program):
+        prog = make()
+        sample = prog.sample_inputs(key)
+        base = jax.jit(prog.build(Impl()))(*sample)
+        for r in prog.regions:
+            out = jax.jit(prog.build(Impl({r.name: "offload"})))(*sample)
+            for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(out)):
+                np.testing.assert_allclose(np.asarray(a, np.float32),
+                                           np.asarray(b, np.float32),
+                                           rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: synthetic programs
+# ---------------------------------------------------------------------------
+_counter = [0]
+
+
+def _make_synthetic_program(n_regions: int, fracs: list[float]):
+    """Synthetic program with controllable per-region resource fractions."""
+    names = []
+    for i, frac in enumerate(fracs[:n_regions]):
+        name = f"synth_{_counter[0]}_{i}"
+        _counter[0] += 1
+        names.append(name)
+        register_variant(name, "ref")(lambda x: x * 2.0 + 1.0)
+        register_variant(name, "offload")(lambda x: x * 2.0 + 1.0)
+
+    def build(impl):
+        def run(x):
+            for nm in names:
+                x = dispatch(nm, impl, x)
+            return x
+        return run
+
+    regions = [Region(nm, variants(nm)["ref"],
+                      (jax.ShapeDtypeStruct((128, 128), jnp.float32),),
+                      deploy_variant="offload")
+               for nm in names]
+    return OffloadableProgram(
+        name="synthetic", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=n_regions)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 6), a=st.integers(1, 5), c=st.integers(1, 3),
+       d=st.integers(1, 4))
+def test_planner_budget_properties(n, a, c, d):
+    prog = _make_synthetic_program(n, [0.01] * n)
+    cfg = PlannerConfig(top_a=a, top_c=c, max_measurements=d, reps=1, warmup=0)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    assert len(rep.ai_selected) <= min(a, n)
+    assert len(rep.eff_selected) <= min(c, a, n)
+    assert len(rep.measurements) <= d
+    assert rep.speedup >= 1.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(vals=st.lists(st.floats(0.4, 0.9), min_size=2, max_size=3))
+def test_combinations_respect_resource_cap(vals):
+    """Combinations whose summed vmem fraction exceeds the cap are skipped."""
+    from repro.core import resources as RES
+
+    prog = _make_synthetic_program(len(vals), vals)
+    for r, frac in zip(prog.regions, vals):
+        RES.register_vmem_estimator(r.name, "offload")(
+            (lambda fr: lambda *a: fr * RES.VMEM_BUDGET)(frac))
+    cfg = PlannerConfig(top_a=5, top_c=3, max_measurements=10, reps=1, warmup=0,
+                        resource_cap=1.0)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    for m in rep.measurements:
+        if m.pattern == "all-ref" or "+" not in m.pattern:
+            continue
+        combo = [kv.split("=")[0] for kv in m.pattern.split("+")]
+        total = sum(v for r, v in zip([r.name for r in prog.regions], vals)
+                    if r in combo)
+        assert total <= cfg.resource_cap + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Impl / regions plumbing
+# ---------------------------------------------------------------------------
+def test_impl_describe_roundtrip():
+    impl = Impl({"a": "offload", "b": "pallas"})
+    assert impl.describe() == "a=offload+b=pallas"
+    assert Impl().describe() == "all-ref"
+
+
+def test_dispatch_unknown_variant_raises():
+    with pytest.raises(KeyError):
+        dispatch("attn_core", Impl({"attn_core": "nope"}), None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: block-level planning over an assigned arch (paper §6 future
+# work: offload of larger functional blocks)
+# ---------------------------------------------------------------------------
+def test_block_level_planning_on_ssm_arch():
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "examples"))
+    from offload_transformer import make_lm_program
+
+    prog = make_lm_program("falcon-mamba-7b", batch=1, seq=32)
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
+        prog, jax.random.PRNGKey(0))
+    # the SSM scan is the arch's hot region and must survive both filters
+    assert rep.ai_selected[0] == "ssm_scan"
+    assert "ssm_scan" in rep.eff_selected
+    assert rep.baseline is not None and rep.baseline.ok

@@ -1,0 +1,61 @@
+"""int8 weight-only quantization for serving (§Perf iteration 6)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import factory as F, lm
+from repro.optim.quantize import (dequantize_leaf, quantize_leaf,
+                                  quantize_params, quantized_bytes,
+                                  quantized_template)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(2, 32), cols=st.integers(1, 32))
+def test_quantize_roundtrip_error_bound(rows, cols):
+    w = jax.random.normal(jax.random.PRNGKey(rows * 131 + cols), (rows, cols))
+    qd = quantize_leaf(w)
+    back = dequantize_leaf(qd, jnp.float32)
+    # per-channel symmetric int8: error <= scale/2 per element
+    err = np.abs(np.asarray(back - w))
+    bound = np.asarray(qd["scale"]) * 0.5 + 1e-6
+    assert (err <= bound[None, :]).all()
+
+
+def test_quantized_serving_matches_fp():
+    cfg = dataclasses.replace(get_config("qwen2-72b").reduced(), dtype="float32")
+    params = F.init_params(cfg, KEY)
+    batch = F.synthetic_batch(cfg, 2, 12, KEY)
+    _, cache = F.make_prefill_step(cfg, ctx=16)(params, batch)
+    tok = batch["tokens"][:, -1:]
+    pos = jnp.full((2,), 12, jnp.int32)
+    lg_fp, _ = F.make_serve_step(cfg)(params, cache, tok, pos)
+    lg_q, _ = F.make_quantized_serve_step(cfg)(quantize_params(params),
+                                               cache, tok, pos)
+    a = np.asarray(lg_fp[:, 0], np.float32)
+    b = np.asarray(lg_q[:, 0], np.float32)
+    cos = (a * b).sum() / (np.linalg.norm(a) * np.linalg.norm(b))
+    assert cos > 0.99
+    assert (a.argmax(-1) == b.argmax(-1)).all()
+
+
+def test_quantized_bytes_halve_for_big_models():
+    tmpl = lm.model_template(get_config("qwen2-72b"))
+    orig, quant = quantized_bytes(tmpl)
+    assert 1.9 < orig / quant <= 2.01
+
+
+def test_quantized_template_structure():
+    tmpl = lm.model_template(get_config("mistral-nemo-12b").reduced())
+    qt = quantized_template(tmpl)
+    from repro.models.params import abstract
+    abs_q = abstract(qt)
+    leaves = jax.tree_util.tree_leaves(abs_q)
+    assert any(l.dtype == jnp.int8 for l in leaves)       # quantized mats
+    assert any(l.dtype == jnp.float32 for l in leaves)    # scales
