@@ -17,6 +17,7 @@ Three columns per app:
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -24,22 +25,27 @@ sys.path.insert(0, "src")
 import jax                                                    # noqa: E402
 
 from repro.apps import mriq, tdfir                            # noqa: E402
+from repro.core.intensity import analyze_region               # noqa: E402
+from repro.core.plan_cache import PlanCache                   # noqa: E402
 from repro.core.planner import AutoOffloader, PlannerConfig   # noqa: E402
+from repro.core.regions import Impl                           # noqa: E402
 from repro.launch.constants import projected_tpu_seconds      # noqa: E402
 
 PAPER = {"tdfir": 4.0, "mriq": 7.1}
 
 
-def run_app(name: str, make_program, reps: int = 5) -> dict:
+def run_app(name: str, make_program, reps: int = 5,
+            cache: PlanCache | None = None) -> dict:
     prog = make_program()
     planner = AutoOffloader(PlannerConfig(reps=reps))
-    report = planner.plan(prog, jax.random.PRNGKey(0))
+    report = planner.plan(prog, jax.random.PRNGKey(0), cache=cache)
     # projected: hot region's kernel roofline time on 1 v5e chip vs its
-    # share of the CPU baseline
-    hot = max(report.candidates, key=lambda c: c.analysis.weighted_flops)
-    proj = projected_tpu_seconds(hot.analysis.flops,
-                                 hot.analysis.boundary_bytes,
-                                 hot.analysis.transcendentals)
+    # share of the CPU baseline.  Re-derived by tracing (cheap) rather than
+    # from report.candidates, which is empty when the plan came from cache.
+    hot = max((analyze_region(r.analysis_fn, *r.analysis_args, name=r.name)
+               for r in prog.regions), key=lambda a: a.weighted_flops)
+    proj = projected_tpu_seconds(hot.flops, hot.boundary_bytes,
+                                 hot.transcendentals)
     projected = report.baseline.run_seconds / max(proj["seconds"], 1e-12)
     return {
         "app": name,
@@ -54,13 +60,20 @@ def run_app(name: str, make_program, reps: int = 5) -> dict:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always re-measure instead of using the plan cache")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    cache = None if args.no_cache else PlanCache.default()
     print("app,paper_speedup,measured_speedup_cpu,projected_v5e_speedup,"
           "baseline_ms,n_measured,best_pattern")
     for name, make in (("tdfir", tdfir.make_program), ("mriq", mriq.make_program)):
-        r = run_app(name, make)
+        r = run_app(name, make, reps=args.reps, cache=cache)
+        best = Impl(r["best_pattern"]).describe() if r["best_pattern"] else "none"
         print(f"{r['app']},{r['paper_speedup']},{r['measured_speedup']:.2f},"
               f"{r['projected_tpu_speedup']:.0f},{r['baseline_ms']:.2f},"
-              f"{r['n_measured']},{'+'.join(r['best_pattern']) or 'none'}")
+              f"{r['n_measured']},{best}")
         print("#", r["report"].summary().replace("\n", "\n# "))
 
 

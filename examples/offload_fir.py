@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.apps.tdfir import make_program
 from repro.configs.paper_apps import TDFIR_FULL
+from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
 from repro.kernels.fir import fir_filter_bank
 from repro.kernels.ref import fir_ref
@@ -26,7 +27,8 @@ from repro.launch.constants import projected_tpu_seconds
 
 print("=== tdFIR automatic offload (paper app #1) ===")
 program = make_program()
-report = AutoOffloader(PlannerConfig(reps=5)).plan(program)
+report = AutoOffloader(PlannerConfig(reps=5)).plan(program,
+                                                   cache=PlanCache.default())
 print(report.summary())
 
 print("\n--- deploy kernel validation (Pallas, interpret mode) ---")

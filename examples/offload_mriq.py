@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.apps.mriq import make_program
 from repro.configs.paper_apps import MRIQ_FULL
+from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
 from repro.kernels.mriq import mriq_compute_q
 from repro.kernels.ref import mriq_ref
@@ -20,7 +21,8 @@ from repro.launch.constants import projected_tpu_seconds
 
 print("=== MRI-Q automatic offload (paper app #2) ===")
 program = make_program()
-report = AutoOffloader(PlannerConfig(reps=5)).plan(program)
+report = AutoOffloader(PlannerConfig(reps=5)).plan(program,
+                                                   cache=PlanCache.default())
 print(report.summary())
 
 print("\n--- deploy kernel validation (Pallas, interpret mode) ---")

@@ -2,10 +2,10 @@
 
 The paper closes with "ループ文だけでなく、FFT 等大きな機能ブロック単位での
 オフロードも検討する" (extend from loop statements to larger functional
-blocks).  Here the planner plans over an LM's block-level regions —
-attention core, MLP core, RG-LRU/SSM scans — whose ref/offload/pallas
-variants are exactly the ones the model zoo dispatches through, so the
-selected pattern IS the model's deploy configuration.
+blocks).  The program construction lives in ``repro.models.offload_program``
+so the serving launcher (``repro.launch.serve --auto-offload``) plans over
+the exact same regions; this example runs the planner interactively and
+reuses the persistent plan cache.
 
 Run:  PYTHONPATH=src python examples/offload_transformer.py [--arch ...]
 """
@@ -14,75 +14,20 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-
-import repro.kernels.ops                    # noqa: F401 (register pallas variants)
-from repro.configs import get_config
+from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
-from repro.core.program import OffloadableProgram, Region
-from repro.core.regions import Impl, variants
-from repro.models import factory as F
-
-
-def make_lm_program(arch: str, batch: int = 2, seq: int = 128) -> OffloadableProgram:
-    cfg = get_config(arch).reduced()
-    params = F.init_params(cfg, jax.random.PRNGKey(0))
-
-    def build(impl: Impl):
-        def run(tokens):
-            return F.make_forward(cfg, impl=Impl({**F.default_impl(cfg), **impl}))(
-                params, {"tokens": tokens})
-        return run
-
-    # region analysis shapes: the FULL arch's per-layer tensors (the planner
-    # reasons about production sizes; measurement runs the reduced model)
-    full = get_config(arch)
-    hd = full.resolved_head_dim or 64
-    s_full = 4096
-    regions = []
-    if full.num_heads:
-        q = jax.ShapeDtypeStruct((1, full.num_heads, s_full, hd), jnp.bfloat16)
-        kv = jax.ShapeDtypeStruct((1, max(full.num_kv_heads, 1), s_full, hd),
-                                  jnp.bfloat16)
-        regions.append(Region("attn_core", variants("attn_core")["ref"],
-                              (q, kv, kv)))
-    if full.d_ff:
-        x = jax.ShapeDtypeStruct((s_full, full.d_model), jnp.bfloat16)
-        wg = jax.ShapeDtypeStruct((full.d_model, full.d_ff), jnp.bfloat16)
-        wd = jax.ShapeDtypeStruct((full.d_ff, full.d_model), jnp.bfloat16)
-        regions.append(Region("mlp_core", variants("mlp_core")["ref"],
-                              (x, wg, wg, wd), deploy_variant="offload"))
-    if full.family == "ssm":
-        di, n = full.d_inner, full.ssm_state
-        a = jax.ShapeDtypeStruct((1, s_full, di, n), jnp.bfloat16)
-        c = jax.ShapeDtypeStruct((1, s_full, n), jnp.bfloat16)
-        h0 = jax.ShapeDtypeStruct((1, di, n), jnp.float32)
-        regions.append(Region("ssm_scan", variants("ssm_scan")["ref"],
-                              (a, a, c, h0), measure_variant="seq"))
-    if full.family == "hybrid":
-        dr = full.rglru_d_rnn or full.d_model
-        a = jax.ShapeDtypeStruct((1, s_full, dr), jnp.bfloat16)
-        h0 = jax.ShapeDtypeStruct((1, dr), jnp.float32)
-        regions.append(Region("rglru_scan", variants("rglru_scan")["ref"],
-                              (a, a, h0)))
-
-    def sample(key):
-        return (jax.random.randint(key, (batch, seq), 0, cfg.vocab_size,
-                                   jnp.int32),)
-
-    return OffloadableProgram(
-        name=f"lm:{arch}", regions=regions, build=build, sample_inputs=sample,
-        source_loop_count=full.num_layers,
-        description="block-level offload planning over an assigned arch")
+from repro.models.offload_program import make_lm_program  # noqa: F401 (re-export)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always re-measure instead of using the plan cache")
     args = ap.parse_args()
     prog = make_lm_program(args.arch)
-    report = AutoOffloader(PlannerConfig(reps=3)).plan(prog)
+    cache = None if args.no_cache else PlanCache.default()
+    report = AutoOffloader(PlannerConfig(reps=3)).plan(prog, cache=cache)
     print(report.summary())
     print("\nDeploy mapping: selected measure-variants correspond to Pallas "
           "kernels on TPU (attn_core->flash_attention, ssm_scan->ssm_scan, "

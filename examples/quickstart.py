@@ -13,6 +13,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
 from repro.core.program import OffloadableProgram, Region
 from repro.core.regions import Impl, dispatch, register_variant
@@ -66,6 +67,9 @@ program = OffloadableProgram(
     source_loop_count=3,
 )
 
-# --- 3. plan ------------------------------------------------------------------
-report = AutoOffloader(PlannerConfig(reps=3)).plan(program)
+# --- 3. plan (cached: a second run is served without re-measuring) ----------
+report = AutoOffloader(PlannerConfig(reps=3)).plan(program,
+                                                   cache=PlanCache.default())
 print(report.summary())
+if report.from_cache:
+    print("(plan served from cache — delete .repro_plan_cache.json to re-measure)")

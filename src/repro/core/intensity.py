@@ -51,15 +51,20 @@ def _aval_bytes(aval) -> int:
 @dataclass
 class RegionAnalysis:
     name: str = ""
-    flops: float = 0.0
-    transcendentals: float = 0.0
+    flops: float = 0.0              # raw counts — never penalty-discounted,
+    transcendentals: float = 0.0    # so roofline projections stay honest
     boundary_bytes: float = 0.0
     loop_count: int = 0             # jaxpr loop statements (scan/while/fori)
     max_trip: float = 1.0
+    alignment: float = 1.0          # layout penalty, applied at ranking time
 
     @property
     def weighted_flops(self) -> float:
-        return self.flops + TRANSCENDENTAL_WEIGHT * self.transcendentals
+        # the penalty discounts the WHOLE weighted total: discounting only
+        # `flops` would under-penalize transcendental-heavy misaligned
+        # regions in the Step-2 AI ranking
+        return self.alignment * (
+            self.flops + TRANSCENDENTAL_WEIGHT * self.transcendentals)
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -147,7 +152,7 @@ def analyze_region(fn, *args, name: str = "") -> RegionAnalysis:
     out_avals = [v.aval for v in jaxpr.jaxpr.outvars]
     acc.boundary_bytes = float(sum(_aval_bytes(a) for a in in_avals)
                                + sum(_aval_bytes(a) for a in out_avals))
-    acc.flops *= alignment_penalty(in_avals)
+    acc.alignment = alignment_penalty(in_avals)
     return acc
 
 

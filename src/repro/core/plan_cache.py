@@ -1,0 +1,177 @@
+"""Persistent plan cache — "once written code, automatically configured per
+placed hardware" (paper §1), closed in code.
+
+The paper's pipeline is expensive by construction: Step 4 compiles each
+candidate pattern for the FPGA (~3 h each).  Its answer is that the search
+runs *once per (application, hardware)* and the chosen pattern is then
+reused.  This module is that reuse: a JSON file mapping
+
+    key = sha256(program name + per-region abstract arg shapes/dtypes +
+                 registered variant sets + backend + planner config)
+
+to the selected offload pattern.  ``AutoOffloader.plan(..., cache=...)``
+returns a cached plan with ZERO new measurements when the key matches, and
+re-plans (then stores) when anything that could change the answer changes —
+the program's shapes, the variant registry, the backend the measurements
+would run on, or the planner budgets.
+
+File format (version 1)::
+
+    {
+      "version": 1,
+      "entries": {
+        "<key>": {
+          "program": "tdfir",
+          "backend": "cpu",
+          "best_pattern": {"fir_bank": "offload"},
+          "pattern": "fir_bank=offload",
+          "speedup": 1.8,
+          "baseline_seconds": 0.0123,
+          "best_seconds": 0.0068,
+          "jaxpr_loop_count": 7,
+          "measured_patterns": ["all-ref", "fir_bank=offload", ...],
+          "created_at": "2026-07-29T12:00:00+00:00"
+        }
+      }
+    }
+
+Entries are self-describing enough to audit by hand; the key payload is
+reproducible from the program + config alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from datetime import datetime, timezone
+from pathlib import Path
+from typing import Optional
+
+import jax
+
+from repro.core.regions import variants
+
+CACHE_VERSION = 1
+DEFAULT_CACHE_ENV = "REPRO_PLAN_CACHE"
+DEFAULT_CACHE_PATH = ".repro_plan_cache.json"
+
+
+def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
+    """Deterministic key for (program, abstract shapes, backend, config).
+
+    ``program`` is an OffloadableProgram; ``config`` a PlannerConfig.  The
+    registered variant set per region is part of the key so that adding a
+    new offload destination (a new variant) re-opens the search.
+    """
+    # measurement-repetition knobs (reps/warmup) don't change the search
+    # space, only timing noise — keying on them would make callers with
+    # different reps miss each other's plans for no reason
+    cfg_fields = {k: v for k, v in dataclasses.asdict(config).items()
+                  if k not in ("reps", "warmup")}
+    payload = {
+        "program": program.name,
+        "backend": backend or jax.default_backend(),
+        "config": cfg_fields,
+        "measurement_conditions": sorted(
+            (k, repr(v)) for k, v in program.cache_extra.items()),
+        "regions": [
+            {
+                "name": r.name,
+                "args": r.arg_signature(),
+                "variants": sorted(variants(r.name)),
+                # rank-key tiebreakers: changing a region's declared
+                # preference can change the selected plan, so it re-keys
+                "preferred": [r.deploy_variant, r.measure_variant],
+                "static_kwargs": sorted(
+                    (k, repr(v)) for k, v in r.static_kwargs.items()),
+            }
+            for r in program.regions
+        ],
+    }
+    blob = json.dumps(payload, sort_keys=True, default=repr)
+    digest = hashlib.sha256(blob.encode()).hexdigest()[:20]
+    return f"{program.name}:{payload['backend']}:{digest}"
+
+
+class PlanCache:
+    """JSON-file plan store.  Safe to share between runs; writes are
+    atomic (tmp + rename) so a crashed planner never corrupts the file."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+        self._data = {"version": CACHE_VERSION, "entries": {}}
+        if self.path.exists():
+            try:
+                loaded = json.loads(self.path.read_text())
+                # valid JSON of the wrong shape (null, a list, missing
+                # entries) is just as cold as unparseable JSON
+                if (isinstance(loaded, dict)
+                        and loaded.get("version") == CACHE_VERSION
+                        and isinstance(loaded.get("entries"), dict)):
+                    self._data = loaded
+            except (json.JSONDecodeError, OSError):
+                pass                  # unreadable cache = cold cache
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def default(cls) -> "PlanCache":
+        """Cache at $REPRO_PLAN_CACHE, else ./.repro_plan_cache.json."""
+        return cls(os.environ.get(DEFAULT_CACHE_ENV, DEFAULT_CACHE_PATH))
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[dict]:
+        entry = self._data["entries"].get(key)
+        return dict(entry) if entry is not None else None
+
+    def put(self, key: str, entry: dict) -> None:
+        entry = dict(entry)
+        entry.setdefault("created_at",
+                         datetime.now(timezone.utc).isoformat(timespec="seconds"))
+        self._data["entries"][key] = entry
+        self._flush(merge=True)
+
+    def invalidate(self, key: str) -> bool:
+        existed = self._data["entries"].pop(key, None) is not None
+        if existed:
+            self._flush(merge=False)
+        return existed
+
+    def clear(self) -> None:
+        self._data["entries"] = {}
+        self._flush(merge=False)
+
+    def __len__(self) -> int:
+        return len(self._data["entries"])
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._data["entries"]
+
+    # ------------------------------------------------------------------
+    def _flush(self, merge: bool) -> None:
+        """Atomic write.  With ``merge``, entries another process wrote to
+        the file since we loaded it are kept (our keys win) — two planners
+        sharing the default cache must not erase each other's plans.
+        invalidate()/clear() flush without merging so deletions stick."""
+        if merge and self.path.exists():
+            try:
+                disk = json.loads(self.path.read_text())
+                if (isinstance(disk, dict)
+                        and disk.get("version") == CACHE_VERSION
+                        and isinstance(disk.get("entries"), dict)):
+                    merged = dict(disk["entries"])
+                    merged.update(self._data["entries"])
+                    self._data["entries"] = merged
+            except (json.JSONDecodeError, OSError):
+                pass
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(json.dumps(self._data, indent=2, sort_keys=True))
+        tmp.replace(self.path)
+
+
+def resolve_cache(cache) -> Optional[PlanCache]:
+    """None | path-like | PlanCache -> Optional[PlanCache]."""
+    if cache is None or isinstance(cache, PlanCache):
+        return cache
+    return PlanCache(cache)

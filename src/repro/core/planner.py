@@ -1,20 +1,39 @@
-"""The paper's automatic loop-offload planner (§3.3, Fig. 2) — TPU-native.
+"""The paper's automatic loop-offload planner (§3.3, Fig. 2) — TPU-native,
+extended to mixed offload destinations (Yamato, arXiv 2011.12431).
 
 Pipeline, faithful to the paper with the FPGA->TPU substitutions of
 DESIGN.md §2:
 
   Step 1  code analysis        — region census + jaxpr loop census
   Step 2  AI filter            — arithmetic intensity per region, keep top-a
-  Step 3  resource filter      — cheap lowering per offload variant ->
+  Step 3  resource filter      — cheap lowering of EVERY registered offload
+                                 variant of each surviving region ->
                                  vmem fraction; efficiency = AI / fraction;
-                                 keep top-c
-  Step 4  measured search      — round 1: each surviving single-region
-                                 pattern; round 2: the combination of round-1
-                                 winners (skipped if summed resource fraction
-                                 exceeds the cap); total measured patterns
-                                 <= d (baseline excluded, as in the paper
-                                 where all-CPU is the pre-existing reference)
-  Step 5  select               — fastest measured pattern
+                                 rank (region, variant) pairs, keep the
+                                 top-c regions (each with its variant
+                                 ranking)
+  Step 4  measured search      — round 1: best variant per surviving region;
+                                 round 2: cross-region combinations of
+                                 round-1 winners, each region keeping its
+                                 winning variant (skipped if the summed
+                                 resource fraction exceeds the cap);
+                                 round 3: leftover budget on runner-up
+                                 variants; total measured patterns <= d
+                                 (baseline excluded, as in the paper where
+                                 all-CPU is the pre-existing reference)
+  Step 5  select               — fastest measured pattern; the selected
+                                 mapping is the measurement's own structured
+                                 ``Impl`` (no string re-parsing)
+
+Because Step 3 ranks (region, variant) pairs rather than regions with one
+pinned variant, the measured patterns may mix destinations across regions —
+e.g. ``{fir_bank: pallas, fir_load: offload}`` — which is exactly the
+mixed-offloading-destination extension of the follow-up paper.
+
+Plans are cacheable: ``plan(..., cache=...)`` consults/updates a persistent
+``PlanCache`` keyed by program name + abstract arg shapes/dtypes + variant
+registry + backend + planner config, so an application is searched once per
+placed hardware and then served from the cache with zero new measurements.
 
 Defaults a=5, c=3, d=4 match the paper's evaluation conditions (§5.1.2).
 """
@@ -26,8 +45,9 @@ from dataclasses import dataclass, field
 import jax
 
 from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
-from repro.core.program import OffloadableProgram, Region
-from repro.core.regions import Impl, variants
+from repro.core.plan_cache import PlanCache, plan_cache_key, resolve_cache
+from repro.core.program import OffloadableProgram
+from repro.core.regions import Impl, offload_variants
 from repro.core.resources import ResourceEstimate, precompile
 from repro.core.search import Measurement, time_callable
 
@@ -43,18 +63,42 @@ class PlannerConfig:
     reps: int = 5
 
 
+def _efficiency(analysis: RegionAnalysis,
+                resources: ResourceEstimate | None) -> float:
+    """The paper's resource efficiency: AI per unit of claimed resources.
+    Single definition — both the ranking and the report read this."""
+    if resources is None or not resources.lower_ok:
+        return 0.0
+    return analysis.arithmetic_intensity / max(
+        resources.resource_fraction, 1e-6)
+
+
 @dataclass
-class CandidateInfo:
+class VariantCandidate:
+    """One (region, variant) offload destination candidate."""
     region: str
+    variant: str
     analysis: RegionAnalysis
-    resources: ResourceEstimate | None = None
+    resources: ResourceEstimate
 
     @property
     def efficiency(self) -> float:
-        if self.resources is None or not self.resources.lower_ok:
-            return 0.0
-        return self.analysis.arithmetic_intensity / max(
-            self.resources.resource_fraction, 1e-6)
+        return _efficiency(self.analysis, self.resources)
+
+
+@dataclass
+class CandidateInfo:
+    """Per-region analysis summary (Step 2 unit; Step 3 fans out to
+    VariantCandidates, the best of which is mirrored here for reporting)."""
+    region: str
+    analysis: RegionAnalysis
+    resources: ResourceEstimate | None = None      # best variant's estimate
+    best_variant: str | None = None
+    variant_estimates: dict[str, ResourceEstimate] = field(default_factory=dict)
+
+    @property
+    def efficiency(self) -> float:
+        return _efficiency(self.analysis, self.resources)
 
 
 @dataclass
@@ -65,24 +109,36 @@ class PlanReport:
     candidates: list[CandidateInfo] = field(default_factory=list)
     ai_selected: list[str] = field(default_factory=list)       # after Step 2
     eff_selected: list[str] = field(default_factory=list)      # after Step 3
+    eff_pairs: list[tuple[str, str]] = field(default_factory=list)
     baseline: Measurement | None = None
     measurements: list[Measurement] = field(default_factory=list)
     best_pattern: dict = field(default_factory=dict)
     speedup: float = 0.0
     skipped_combinations: list[str] = field(default_factory=list)
+    from_cache: bool = False
+    cache_key: str = ""
+
+    def best_impl(self) -> Impl:
+        """The selected pattern as a dispatchable Impl."""
+        return Impl(self.best_pattern)
 
     def summary(self) -> str:
-        lines = [f"== offload plan: {self.program} ==",
-                 f"loops: source={self.source_loop_count} jaxpr={self.jaxpr_loop_count}",
-                 f"AI top-a: {self.ai_selected}",
-                 f"efficiency top-c: {self.eff_selected}"]
+        lines = [f"== offload plan: {self.program} =="
+                 + ("  [served from plan cache]" if self.from_cache else "")]
+        lines += [f"loops: source={self.source_loop_count} jaxpr={self.jaxpr_loop_count}",
+                  f"AI top-a: {self.ai_selected}",
+                  f"efficiency top-c: {self.eff_selected}"]
+        if self.eff_pairs:
+            lines.append("ranked destinations: "
+                         + ", ".join(f"{r}={v}" for r, v in self.eff_pairs))
         for c in self.candidates:
             res = c.resources
             lines.append(
                 f"  {c.region:18s} AI={c.analysis.arithmetic_intensity:10.2f} "
                 f"flops={c.analysis.weighted_flops:.3e} "
                 f"vmem_frac={res.resource_fraction if res else float('nan'):8.4f} "
-                f"eff={c.efficiency:10.1f}")
+                f"eff={c.efficiency:10.1f}"
+                + (f" best_variant={c.best_variant}" if c.best_variant else ""))
         if self.baseline:
             lines.append(f"baseline (all-ref): {self.baseline.run_seconds*1e3:.2f} ms")
         for m in self.measurements:
@@ -98,14 +154,53 @@ class AutoOffloader:
 
     # ------------------------------------------------------------------
     def plan(self, program: OffloadableProgram,
-             key: jax.Array | None = None) -> PlanReport:
+             key: jax.Array | None = None,
+             cache: "PlanCache | str | None" = None) -> PlanReport:
+        """Run the staged search, or serve the plan from ``cache``.
+
+        ``cache`` may be a PlanCache, a path, or None (no caching).  A hit
+        returns with zero new measurements; a miss runs the full pipeline
+        and stores the selected pattern.
+        """
+        store = resolve_cache(cache)
+        ckey = plan_cache_key(program, self.config) if store is not None else ""
+        if store is not None:
+            entry = store.get(ckey)
+            if entry is not None:
+                return self._report_from_cache(program, ckey, entry)
+        report = self._plan_measured(program, key)
+        report.cache_key = ckey
+        if store is not None and self._sound(report):
+            store.put(ckey, self._cache_entry(report))
+        return report
+
+    @staticmethod
+    def _sound(report: PlanReport) -> bool:
+        """Only sound searches are worth freezing into the cache: a failed
+        baseline or an all-patterns-failed round is likely transient (OOM,
+        compile hiccup) and must be retried on the next plan() instead of
+        being served forever.  An empty measurement list with a healthy
+        baseline is legitimate (no destination fit the cap) and cacheable."""
+        if report.baseline is None or not report.baseline.ok:
+            return False
+        if report.measurements and not any(m.ok for m in report.measurements):
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+    def _plan_measured(self, program: OffloadableProgram,
+                       key: jax.Array | None) -> PlanReport:
         cfg = self.config
         key = key if key is not None else jax.random.PRNGKey(0)
         sample = program.sample_inputs(key)
 
         # ---- Step 1: code analysis ------------------------------------
         full_ref = program.build(Impl())
-        jaxpr_loops = count_loops(full_ref, *sample)
+        try:
+            jaxpr_loops = count_loops(full_ref, *sample)
+        except Exception:  # noqa: BLE001 — census is advisory; a broken
+            jaxpr_loops = 0  # all-ref build is recorded by the baseline
+                             # measurement below, not raised out of plan()
         report = PlanReport(program=program.name,
                             source_loop_count=program.source_loop_count,
                             jaxpr_loop_count=jaxpr_loops)
@@ -120,73 +215,146 @@ class AutoOffloader:
         ai_set = [c.region for c in by_ai[:cfg.top_a]]
         report.ai_selected = ai_set
 
-        # ---- Step 3: resource-efficiency filter -----------------------
+        # ---- Step 3: resource filter over (region, variant) pairs -----
         region_map = {r.name: r for r in program.regions}
+        pairs: list[VariantCandidate] = []
         for c in cands:
             if c.region not in ai_set:
                 continue
             r = region_map[c.region]
-            var = (r.deploy_variant
-                   if r.deploy_variant in variants(c.region) else r.measure_variant)
-            fn = variants(c.region).get(var)
-            if fn is None:
-                continue
-            c.resources = precompile(c.region, var, fn, r.analysis_args,
-                                     r.static_kwargs)
-        eligible = [c for c in cands if c.region in ai_set and c.resources
-                    and c.resources.lower_ok
-                    and c.resources.resource_fraction <= cfg.resource_cap]
-        by_eff = sorted(eligible, key=lambda c: -c.efficiency)
-        eff_set = [c.region for c in by_eff[:cfg.top_c]]
-        report.eff_selected = eff_set
+            for var, fn in offload_variants(c.region).items():
+                est = precompile(c.region, var, fn, r.analysis_args,
+                                 r.static_kwargs)
+                c.variant_estimates[var] = est
+                pairs.append(VariantCandidate(c.region, var, c.analysis, est))
+        eligible = [p for p in pairs if p.resources.lower_ok
+                    and p.resources.resource_fraction <= cfg.resource_cap]
 
-        # ---- Step 4: measured pattern search --------------------------
+        def rank_key(p: VariantCandidate):
+            # efficiency first; the region's declared deploy/measure
+            # preference breaks ties (equal AI + equal fraction is common
+            # for same-shaped variants)
+            r = region_map[p.region]
+            preferred = p.variant in (r.deploy_variant, r.measure_variant)
+            return (-p.efficiency, 0 if preferred else 1, p.variant)
+
+        ranked = sorted(eligible, key=rank_key)
+
+        # per-region variant ranking; top-c regions by their best pair
+        variants_of: dict[str, list[VariantCandidate]] = {}
+        for p in ranked:
+            variants_of.setdefault(p.region, []).append(p)
+        eff_regions: list[str] = []
+        for p in ranked:
+            if p.region not in eff_regions:
+                eff_regions.append(p.region)
+            if len(eff_regions) == cfg.top_c:
+                break
+        report.eff_selected = eff_regions
+        report.eff_pairs = [(p.region, p.variant) for p in ranked
+                            if p.region in eff_regions]
+        for c in cands:                         # mirror best pair for reports
+            best = variants_of.get(c.region, [])
+            if best:
+                c.best_variant = best[0].variant
+                c.resources = best[0].resources
+            elif c.variant_estimates:           # all failed/over-cap: show one
+                c.resources = next(iter(c.variant_estimates.values()))
+
+        # ---- Step 4: measured mixed-pattern search --------------------
         report.baseline = time_callable(full_ref, sample, warmup=cfg.warmup,
-                                        reps=cfg.reps, pattern="all-ref")
+                                        reps=cfg.reps, pattern="all-ref",
+                                        impl=Impl())
         budget = cfg.max_measurements
-        frac = {c.region: c.resources.resource_fraction for c in eligible}
+        frac = {(p.region, p.variant): p.resources.resource_fraction
+                for p in eligible}
 
         def measure(impl: Impl) -> Measurement:
             fn = program.build(impl)
             m = time_callable(fn, sample, warmup=cfg.warmup, reps=cfg.reps,
-                              pattern=impl.describe())
+                              pattern=impl.describe(), impl=impl)
             report.measurements.append(m)
             return m
 
-        singles: list[tuple[str, Measurement]] = []
-        for region in eff_set:
+        # round 1: each surviving region's best destination, singly
+        round1: list[tuple[str, str, Measurement]] = []
+        for region in eff_regions:
             if budget <= 0:
                 break
-            impl = Impl({region: region_map[region].measure_variant})
-            singles.append((region, measure(impl)))
+            top = variants_of[region][0]
+            m = measure(Impl({region: top.variant}))
+            round1.append((region, top.variant, m))
             budget -= 1
 
-        winners = [r for r, m in singles
+        winners = [(r, v) for r, v, m in round1
                    if m.ok and m.run_seconds < report.baseline.run_seconds]
-        # round 2: combine winners (largest combo first), resource-capped
+        # round 2: mixed cross-region combinations of round-1 winners
+        # (largest combo first), resource-capped on the chosen variants
         for size in range(len(winners), 1, -1):
             if budget <= 0:
                 break
             for combo in itertools.combinations(winners, size):
                 if budget <= 0:
                     break
-                if sum(frac.get(r, 0.0) for r in combo) > cfg.resource_cap:
-                    report.skipped_combinations.append("+".join(combo))
+                if sum(frac[rv] for rv in combo) > cfg.resource_cap:
+                    report.skipped_combinations.append(
+                        "+".join(f"{r}={v}" for r, v in combo))
                     continue
-                impl = Impl({r: region_map[r].measure_variant for r in combo})
-                measure(impl)
+                measure(Impl(dict(combo)))
                 budget -= 1
+
+        # round 3: leftover budget tries runner-up destinations singly
+        tried = {(r, v) for r, v, _ in round1}
+        for p in ranked:
+            if budget <= 0:
+                break
+            if p.region not in eff_regions or (p.region, p.variant) in tried:
+                continue
+            tried.add((p.region, p.variant))
+            measure(Impl({p.region: p.variant}))
+            budget -= 1
 
         # ---- Step 5: select -------------------------------------------
         ok_measurements = [m for m in report.measurements if m.ok]
         best = min(ok_measurements, key=lambda m: m.run_seconds,
                    default=None)
         if best is not None and best.run_seconds < report.baseline.run_seconds:
-            report.best_pattern = dict(
-                item.split("=") for item in best.pattern.split("+")) \
-                if best.pattern != "all-ref" else {}
+            report.best_pattern = best.mapping()
             report.speedup = report.baseline.run_seconds / best.run_seconds
         else:
             report.best_pattern = {}
             report.speedup = 1.0
         return report
+
+    # ------------------------------------------------------------------
+    def _report_from_cache(self, program: OffloadableProgram, ckey: str,
+                           entry: dict) -> PlanReport:
+        baseline_s = float(entry.get("baseline_seconds", 0.0))
+        report = PlanReport(
+            program=program.name,
+            source_loop_count=program.source_loop_count,
+            jaxpr_loop_count=int(entry.get("jaxpr_loop_count", 0)),
+            best_pattern=dict(entry.get("best_pattern", {})),
+            speedup=float(entry.get("speedup", 1.0)),
+            from_cache=True,
+            cache_key=ckey,
+        )
+        report.baseline = Measurement("all-ref", 0.0, baseline_s, [],
+                                      impl={})
+        return report
+
+    @staticmethod
+    def _cache_entry(report: PlanReport) -> dict:
+        baseline_s = report.baseline.run_seconds if report.baseline else 0.0
+        return {
+            "program": report.program,
+            "backend": jax.default_backend(),
+            "best_pattern": dict(report.best_pattern),
+            "pattern": Impl(report.best_pattern).describe(),
+            "speedup": report.speedup,
+            "baseline_seconds": baseline_s,
+            "best_seconds": (baseline_s / report.speedup
+                             if report.speedup > 0 else baseline_s),
+            "jaxpr_loop_count": report.jaxpr_loop_count,
+            "measured_patterns": [m.pattern for m in report.measurements],
+        }

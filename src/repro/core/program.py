@@ -21,9 +21,21 @@ class Region:
     name: str
     analysis_fn: Callable            # the region's computation, traceable
     analysis_args: tuple             # ShapeDtypeStructs (full problem size)
-    measure_variant: str = "offload"  # variant timed on this backend
-    deploy_variant: str = "pallas"    # variant deployed on TPU (if registered)
+    # ranking tiebreakers: among equal-efficiency destinations the planner
+    # prefers the declared deploy/measure variant (see planner rank_key)
+    measure_variant: str = "offload"
+    deploy_variant: str = "pallas"
     static_kwargs: dict = field(default_factory=dict)
+
+    def arg_signature(self) -> list[str]:
+        """Abstract shapes/dtypes of the analysis args — the shape part of
+        the plan-cache key."""
+        out = []
+        for a in self.analysis_args:
+            shape = getattr(a, "shape", ())
+            dtype = getattr(a, "dtype", None)
+            out.append(f"{dtype}[{','.join(str(d) for d in shape)}]")
+        return out
 
 
 @dataclass
@@ -35,3 +47,7 @@ class OffloadableProgram:
     sample_inputs: Callable[[jax.Array], tuple]   # rng key -> concrete args
     source_loop_count: int = 0               # loops in the original C source
     description: str = ""
+    # extra measurement conditions folded into the plan-cache key (e.g. the
+    # batch/seq the sample runs at) — anything that changes Step-4 timings
+    # but is not visible in the regions' abstract analysis args
+    cache_extra: dict = field(default_factory=dict)

@@ -33,6 +33,12 @@ def variants(region: str) -> dict[str, Callable]:
     return dict(REGISTRY.get(region, {}))
 
 
+def offload_variants(region: str) -> dict[str, Callable]:
+    """Every registered non-ref variant — the destinations the mixed-pattern
+    planner searches over (``ref`` is the host side, never an offload)."""
+    return {v: fn for v, fn in REGISTRY.get(region, {}).items() if v != "ref"}
+
+
 def region_names() -> list[str]:
     return sorted(REGISTRY)
 

@@ -53,10 +53,16 @@ def _default_vmem_estimate(fn, args) -> float:
                 if v.aval.shape:
                     biggest = max(biggest, int(np.prod(v.aval.shape))
                                   * jnp.dtype(v.aval.dtype).itemsize)
-            for p in ("jaxpr", "body_jaxpr", "call_jaxpr"):
-                inner = eqn.params.get(p) if hasattr(eqn, "params") else None
+            if not hasattr(eqn, "params"):
+                continue
+            for p in ("jaxpr", "body_jaxpr", "call_jaxpr", "cond_jaxpr"):
+                inner = eqn.params.get(p)
                 if inner is not None:
                     walk(getattr(inner, "jaxpr", inner))
+            # `cond` carries its arms in `branches`, not a single sub-jaxpr;
+            # skipping them let conditional regions under-report VMEM
+            for br in eqn.params.get("branches", ()) or ():
+                walk(getattr(br, "jaxpr", br))
     walk(jaxpr.jaxpr)
     return float(min(biggest, 8 * VMEM_BUDGET))
 
@@ -81,7 +87,7 @@ def precompile(region: str, variant: str, fn: Callable, args,
                static_kwargs: Optional[dict] = None) -> ResourceEstimate:
     """The cheap lowering pass.  ``args`` may be ShapeDtypeStructs."""
     static_kwargs = static_kwargs or {}
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered = jax.jit(lambda *a: fn(*a, **static_kwargs)).lower(*args)
         text = lowered.as_text()
@@ -90,10 +96,10 @@ def precompile(region: str, variant: str, fn: Callable, args,
         vmem = float(est(*args)) if est else _default_vmem_estimate(
             lambda *a: fn(*a, **static_kwargs), args)
         return ResourceEstimate(region, variant, vmem, hlo_ops,
-                                time.time() - t0, True)
+                                time.perf_counter() - t0, True)
     except Exception as e:  # noqa: BLE001 — a failed lower = unusable variant
         return ResourceEstimate(region, variant, float("inf"), 0,
-                                time.time() - t0, False, f"{type(e).__name__}: {e}")
+                                time.perf_counter() - t0, False, f"{type(e).__name__}: {e}")
 
 
 # ---------------------------------------------------------------------------

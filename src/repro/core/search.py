@@ -4,6 +4,10 @@ The paper compiles each candidate pattern for the FPGA (~3 h) and runs the
 app's sample benchmark.  Here a pattern compiles in seconds and runs on the
 available backend; the *structure* (bounded number of measured patterns,
 best-of-measured selection) is identical.
+
+Timing uses ``time.perf_counter`` (monotonic, highest available resolution):
+``time.time`` is subject to NTP slew / wall-clock adjustments and can make
+``run_seconds`` jitter or even go negative across an adjustment.
 """
 from __future__ import annotations
 
@@ -22,6 +26,14 @@ class Measurement:
     runs: list[float]
     ok: bool = True
     error: str = ""
+    # structured offload pattern {region -> variant}; `pattern` is only its
+    # human-readable rendering.  None for measurements taken before the
+    # planner attached one (e.g. ad-hoc time_callable use).
+    impl: dict | None = None
+
+    def mapping(self) -> dict:
+        """The measured {region -> variant} mapping (empty = all-ref)."""
+        return dict(self.impl) if self.impl else {}
 
 
 def _block(tree) -> None:
@@ -31,20 +43,22 @@ def _block(tree) -> None:
 
 
 def time_callable(fn, args, *, warmup: int = 1, reps: int = 5,
-                  pattern: str = "") -> Measurement:
+                  pattern: str = "", impl: dict | None = None) -> Measurement:
+    impl = dict(impl) if impl is not None else None
     try:
         jitted = jax.jit(fn)
-        t0 = time.time()
+        t0 = time.perf_counter()
         _block(jitted(*args))            # compile + first run
-        compile_s = time.time() - t0
+        compile_s = time.perf_counter() - t0
         for _ in range(max(warmup - 1, 0)):
             _block(jitted(*args))
         runs = []
         for _ in range(reps):
-            t = time.time()
+            t = time.perf_counter()
             _block(jitted(*args))
-            runs.append(time.time() - t)
-        return Measurement(pattern, compile_s, float(np.median(runs)), runs)
+            runs.append(time.perf_counter() - t)
+        return Measurement(pattern, compile_s, float(np.median(runs)), runs,
+                           impl=impl)
     except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
         return Measurement(pattern, 0.0, float("inf"), [], False,
-                           f"{type(e).__name__}: {e}")
+                           f"{type(e).__name__}: {e}", impl=impl)

@@ -41,8 +41,8 @@ def build_mesh(mesh_kind: str, mesh_shape: str | None):
     if mesh_shape:
         dims = tuple(int(x) for x in mesh_shape.split(","))
         axes = ("pod", "data", "model")[-len(dims):] if len(dims) == 3 else ("data", "model")
-        return jax.make_mesh(dims, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        from repro.launch.mesh import _mesh
+        return _mesh(dims, axes)
     return make_production_mesh(multi_pod=(mesh_kind == "multi"))
 
 
@@ -79,7 +79,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
         impl = Impl({**impl, **impl_override})
         rec["impl"] = dict(impl)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         if shape.kind == "train":
             step = RS.make_train_step(cfg, pcfg, impl=impl)
@@ -122,11 +122,11 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
                                  donate_argnums=(1,) if pcfg.donate_cache else ())
                 lowered = jitted.lower(params_abs, cache_abs, specs["tokens"],
                                        specs["pos"])
-        rec["lower_s"] = round(time.time() - t0, 2)
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
 
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
 
         mem = compiled.memory_analysis()
         rec["memory"] = {
@@ -158,7 +158,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
     return rec
 
 

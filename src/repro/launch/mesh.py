@@ -5,17 +5,23 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    """jax.make_mesh across jax versions: AxisType (and the axis_types
+    kwarg) only exist in newer releases; older ones are Auto-only anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The assigned production mesh: 16x16 = 256 chips per pod; 2 pods = 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests only."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _mesh((data, model), ("data", "model"))

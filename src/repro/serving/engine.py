@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.regions import Impl
 from repro.models import factory as F
 
 
@@ -61,14 +62,18 @@ def cache_insert(full_cache, one_cache, slot: int):
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 ctx: int = 128, seed: int = 0):
+                 ctx: int = 128, seed: int = 0, impl=None):
+        # `impl` is an offload pattern ({region -> variant}, e.g. the
+        # planner's PlanReport.best_impl()); None = architectural defaults
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.ctx = ctx
         self.n_front = cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0
-        self._prefill = jax.jit(F.make_prefill_step(cfg, ctx=ctx))
-        self._decode = jax.jit(F.make_serve_step(cfg))
+        if impl is not None:        # planner patterns override arch defaults
+            impl = Impl({**F.default_impl(cfg), **impl})
+        self._prefill = jax.jit(F.make_prefill_step(cfg, impl=impl, ctx=ctx))
+        self._decode = jax.jit(F.make_serve_step(cfg, impl=impl))
         self.cache = F.init_cache(cfg, slots, ctx)
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots

@@ -13,7 +13,8 @@ sys.path.insert(0, %r)
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import _mesh
+mesh = _mesh((4,), ("pod",))
 L, D, B = 8, 16, 8
 key = jax.random.PRNGKey(0)
 stack = {"w": jax.random.normal(key, (L, D, D)) * 0.1}

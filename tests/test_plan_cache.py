@@ -1,0 +1,227 @@
+"""Persistent plan cache: hit/miss round-trip, key sensitivity, file format,
+corruption recovery — the "search once per placed hardware" contract."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan_cache import PlanCache, plan_cache_key, resolve_cache
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import dispatch, register_variant, variants
+
+_counter = [0]
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 300, body, x)
+
+
+def _two_region_program(shape=(128, 128), names=None):
+    """Two regions, each with >= 2 non-ref destinations (acceptance shape)."""
+    if names is None:
+        names = (f"pca_{_counter[0]}", f"pcb_{_counter[0]}")
+        _counter[0] += 1
+    a, b = names
+    for nm in (a, b):
+        register_variant(nm, "ref")(_slow_ref)
+        register_variant(nm, "offload")(lambda x: x * 1.0000001)
+        register_variant(nm, "fast")(lambda x: x + 1e-7)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct(shape, jnp.float32),)
+    regions = [Region(a, variants(a)["ref"], abstract),
+               Region(b, variants(b)["ref"], abstract)]
+    return OffloadableProgram(
+        name="plan_cache_prog", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, shape),),
+        source_loop_count=2), a, b
+
+
+def test_plan_cache_miss_measures_mixed_then_hit_is_free(tmp_path):
+    """Acceptance: >= 2 non-ref variants per region -> a mixed pattern is
+    measured; the second plan() is served from cache with ZERO new
+    measurements and the same selection."""
+    prog, a, b = _two_region_program()
+    cache = PlanCache(tmp_path / "plans.json")
+    planner = AutoOffloader(PlannerConfig(max_measurements=6, reps=3, warmup=0))
+
+    rep1 = planner.plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert not rep1.from_cache
+    assert len(rep1.measurements) >= 1
+    # at least one measured pattern maps >= 2 regions (a cross-region mix)
+    assert any(len(m.mapping()) >= 2 for m in rep1.measurements)
+    assert len(cache) == 1
+
+    rep2 = planner.plan(prog, jax.random.PRNGKey(1), cache=cache)
+    assert rep2.from_cache
+    assert rep2.measurements == []                 # zero new measurements
+    assert rep2.best_pattern == rep1.best_pattern
+    assert rep2.speedup == pytest.approx(rep1.speedup)
+    assert rep2.baseline.run_seconds == pytest.approx(
+        rep1.baseline.run_seconds)
+    assert rep2.cache_key == rep1.cache_key
+
+
+def test_plan_cache_key_sensitivity():
+    cfg = PlannerConfig()
+    names = ("pck_shape_a", "pck_shape_b")
+    prog_a, _, _ = _two_region_program(shape=(128, 128), names=names)
+    prog_b, _, _ = _two_region_program(shape=(256, 128), names=names)
+    # same program + regions, different abstract shapes -> different key
+    assert plan_cache_key(prog_a, cfg) != plan_cache_key(prog_b, cfg)
+    # planner budgets are part of the key (different search = different plan)
+    assert plan_cache_key(prog_a, cfg) != plan_cache_key(
+        prog_a, PlannerConfig(max_measurements=2))
+    # reps/warmup only change timing noise, not the search space: same key,
+    # so callers with different measurement settings share plans
+    assert plan_cache_key(prog_a, cfg) == plan_cache_key(
+        prog_a, PlannerConfig(reps=9, warmup=3))
+    # measurement conditions (e.g. batch/seq of the sample) are in the key
+    prog_c, _, _ = _two_region_program(shape=(128, 128), names=names)
+    prog_c.cache_extra = {"batch": 8, "seq": 1024}
+    assert plan_cache_key(prog_c, cfg) != plan_cache_key(prog_a, cfg)
+    # stable for an identical program/config
+    assert plan_cache_key(prog_a, cfg) == plan_cache_key(prog_a, cfg)
+    # backend is part of the key
+    assert plan_cache_key(prog_a, cfg, backend="tpu") != plan_cache_key(
+        prog_a, cfg, backend="cpu")
+
+
+def test_plan_cache_key_reopens_on_new_variant():
+    """Registering a new offload destination must invalidate the old plan
+    (the search space changed)."""
+    cfg = PlannerConfig()
+    prog, a, _ = _two_region_program()
+    before = plan_cache_key(prog, cfg)
+    register_variant(a, "pallas")(lambda x: x)
+    assert plan_cache_key(prog, cfg) != before
+
+
+def test_plan_cache_persists_across_instances(tmp_path):
+    path = tmp_path / "plans.json"
+    prog, _, _ = _two_region_program()
+    planner = AutoOffloader(PlannerConfig(max_measurements=2, reps=1, warmup=0))
+    rep1 = planner.plan(prog, jax.random.PRNGKey(0), cache=PlanCache(path))
+    # a fresh PlanCache object (new process analogue) serves the same plan
+    rep2 = planner.plan(prog, jax.random.PRNGKey(0), cache=PlanCache(path))
+    assert rep2.from_cache and rep2.best_pattern == rep1.best_pattern
+    # plan() also accepts a bare path
+    rep3 = planner.plan(prog, jax.random.PRNGKey(0), cache=path)
+    assert rep3.from_cache
+
+
+def test_plan_cache_file_format(tmp_path):
+    path = tmp_path / "plans.json"
+    prog, _, _ = _two_region_program()
+    planner = AutoOffloader(PlannerConfig(max_measurements=2, reps=1, warmup=0))
+    rep = planner.plan(prog, jax.random.PRNGKey(0), cache=PlanCache(path))
+    data = json.loads(path.read_text())
+    assert data["version"] == 1
+    entry = data["entries"][rep.cache_key]
+    for field in ("program", "backend", "best_pattern", "pattern", "speedup",
+                  "baseline_seconds", "jaxpr_loop_count", "measured_patterns",
+                  "created_at"):
+        assert field in entry
+    assert entry["program"] == prog.name
+    assert entry["best_pattern"] == rep.best_pattern
+
+
+def test_plan_cache_corrupt_file_is_cold_not_fatal(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json!")
+    cache = PlanCache(path)
+    assert len(cache) == 0
+    prog, _, _ = _two_region_program()
+    rep = AutoOffloader(PlannerConfig(max_measurements=2, reps=1,
+                                      warmup=0)).plan(
+        prog, jax.random.PRNGKey(0), cache=cache)
+    assert not rep.from_cache
+    assert len(cache) == 1
+    json.loads(path.read_text())                   # rewritten as valid JSON
+
+
+def test_plan_cache_wrong_shape_json_is_cold_not_fatal(tmp_path):
+    """Valid JSON of the wrong shape (null, list, missing entries) must be
+    treated as a cold cache, same as unparseable bytes."""
+    for i, content in enumerate(("null", "[]", '{"version": 1}',
+                                 '{"version": 99, "entries": {}}')):
+        path = tmp_path / f"c{i}.json"
+        path.write_text(content)
+        cache = PlanCache(path)
+        assert len(cache) == 0
+        cache.put("k", {"best_pattern": {}, "speedup": 1.0})
+        assert "k" in PlanCache(path)          # rewritten as a sound store
+
+
+def test_unsound_search_is_not_cached(tmp_path):
+    """A transiently failing search (broken baseline / every measurement
+    failed) must be retried next time, not frozen into the cache."""
+    name = f"boom_{_counter[0]}"
+    _counter[0] += 1
+
+    def bad_ref(x):
+        raise RuntimeError("transient")
+
+    register_variant(name, "ref")(bad_ref)
+    register_variant(name, "offload")(lambda x: x * 2.0)
+
+    def build(impl):
+        def run(x):
+            return dispatch(name, impl, x)
+        return run
+
+    prog = OffloadableProgram(
+        name="boom",
+        regions=[Region(name, variants(name)["offload"],
+                        (jax.ShapeDtypeStruct((128, 128), jnp.float32),))],
+        build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=1)
+    cache = PlanCache(tmp_path / "plans.json")
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
+        prog, jax.random.PRNGKey(0), cache=cache)
+    assert not rep.baseline.ok
+    assert len(cache) == 0                     # nothing frozen
+    assert not (tmp_path / "plans.json").exists()
+
+
+def test_plan_cache_put_merges_concurrent_writers(tmp_path):
+    """Two processes sharing the cache file must not erase each other's
+    plans on put(); deletions still stick."""
+    path = tmp_path / "plans.json"
+    c1 = PlanCache(path)
+    c2 = PlanCache(path)                 # both loaded the same (cold) file
+    c1.put("k1", {"best_pattern": {}, "speedup": 1.0})
+    c2.put("k2", {"best_pattern": {}, "speedup": 1.0})   # must keep k1
+    fresh = PlanCache(path)
+    assert "k1" in fresh and "k2" in fresh
+    fresh.invalidate("k1")
+    assert "k1" not in PlanCache(path)
+    assert "k2" in PlanCache(path)
+
+
+def test_plan_cache_invalidate_and_clear(tmp_path):
+    cache = PlanCache(tmp_path / "plans.json")
+    cache.put("k1", {"best_pattern": {}, "speedup": 1.0})
+    cache.put("k2", {"best_pattern": {}, "speedup": 1.0})
+    assert "k1" in cache and len(cache) == 2
+    assert cache.invalidate("k1")
+    assert not cache.invalidate("k1")
+    assert "k1" not in cache
+    cache.clear()
+    assert len(cache) == 0
+
+
+def test_resolve_cache_forms():
+    assert resolve_cache(None) is None
+    pc = PlanCache("unused.json")
+    assert resolve_cache(pc) is pc

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.apps import mriq, tdfir
 from repro.core.intensity import analyze_region, count_loops
@@ -56,8 +56,24 @@ def test_alignment_penalty_orders_misaligned_below_aligned():
                              jax.ShapeDtypeStruct((128, 128), jnp.float32))
     tiny = analyze_region(f, jax.ShapeDtypeStruct((128, 7), jnp.float32),
                           jax.ShapeDtypeStruct((7, 128), jnp.float32))
-    # per-flop discount: compare penalty-adjusted flops over true flops
-    assert tiny.flops / (2 * 128 * 7 * 128) < aligned.flops / (2 * 128**3)
+    # per-flop discount of the RANKING metric: weighted_flops over true flops
+    assert (tiny.weighted_flops / (2 * 128 * 7 * 128)
+            < aligned.weighted_flops / (2 * 128**3))
+    # raw counts stay undiscounted (roofline projections need true op counts)
+    assert tiny.flops == 2 * 128 * 7 * 128
+    assert tiny.alignment < 1.0 == aligned.alignment
+
+
+def test_alignment_penalty_applies_to_transcendentals():
+    """Regression: the penalty must discount the whole weighted total, not
+    just flops — transcendental-heavy misaligned regions were under-ranked."""
+    f = lambda a: jnp.sin(a)
+    mis = analyze_region(f, jax.ShapeDtypeStruct((128, 7), jnp.float32))
+    ali = analyze_region(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    assert mis.transcendentals == 128 * 7          # raw count preserved
+    per_elem_mis = mis.weighted_flops / (128 * 7)
+    per_elem_ali = ali.weighted_flops / (128 * 128)
+    assert per_elem_mis < per_elem_ali
 
 
 # ---------------------------------------------------------------------------
@@ -204,18 +220,153 @@ def test_dispatch_unknown_variant_raises():
 
 
 # ---------------------------------------------------------------------------
+# Mixed-destination pattern search (arXiv 2011.12431 extension)
+# ---------------------------------------------------------------------------
+def _slow_ref(x):
+    """Loop-faithful stand-in: 400 sequential transcendental sweeps, so any
+    vectorized variant wins by orders of magnitude (keeps timing asserts
+    robust on a loaded CI box)."""
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 400, body, x)
+
+
+def _mixed_program(tag: str):
+    """Two regions; region a has TWO offload destinations (fast > offload by
+    pinned resource fractions), region b has one."""
+    from repro.core import resources as RES
+
+    a, b = f"{tag}_a", f"{tag}_b"
+    register_variant(a, "ref")(_slow_ref)
+    register_variant(a, "offload")(lambda x: x * 1.0000001)
+    register_variant(a, "fast")(lambda x: x + 1e-7)
+    register_variant(b, "ref")(_slow_ref)
+    register_variant(b, "offload")(lambda x: x - 1e-7)
+    RES.register_vmem_estimator(a, "fast")(lambda *ar: 0.001 * RES.VMEM_BUDGET)
+    RES.register_vmem_estimator(a, "offload")(lambda *ar: 0.5 * RES.VMEM_BUDGET)
+    RES.register_vmem_estimator(b, "offload")(lambda *ar: 0.01 * RES.VMEM_BUDGET)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    regions = [Region(a, variants(a)["ref"], abstract),
+               Region(b, variants(b)["ref"], abstract)]
+    prog = OffloadableProgram(
+        name=f"mixed_{tag}", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=2)
+    return prog, a, b
+
+
+def test_mixed_destination_pattern_measured_and_selected():
+    name = f"mix_{_counter[0]}"
+    _counter[0] += 1
+    prog, a, b = _mixed_program(name)
+    cfg = PlannerConfig(top_a=5, top_c=3, max_measurements=6, reps=3, warmup=0)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+
+    # Step 3 ranked every (region, variant) destination, best first
+    assert (a, "fast") in rep.eff_pairs and (a, "offload") in rep.eff_pairs
+    assert rep.eff_pairs.index((a, "fast")) < rep.eff_pairs.index((a, "offload"))
+
+    # round 1 measured each region's best destination singly
+    mappings = [m.mapping() for m in rep.measurements]
+    assert {a: "fast"} in mappings
+    assert {b: "offload"} in mappings
+    # round 2 measured a MIXED cross-region combination (variants differ)
+    assert {a: "fast", b: "offload"} in mappings
+    # round 3 spent leftover budget on the runner-up destination
+    assert {a: "offload"} in mappings
+    # both refs are slow loops: the mixed combination wins outright
+    assert rep.best_pattern == {a: "fast", b: "offload"}
+    assert rep.speedup > 1.0
+
+
+def test_best_pattern_is_structured_mapping_of_winner():
+    """best_pattern must equal the winning Measurement's own Impl — no
+    string re-parsing (regression for the pattern.split('+') round-trip)."""
+    name = f"mixw_{_counter[0]}"
+    _counter[0] += 1
+    prog, a, b = _mixed_program(name)
+    rep = AutoOffloader(PlannerConfig(max_measurements=6, reps=3,
+                                      warmup=0)).plan(prog, jax.random.PRNGKey(0))
+    ok = [m for m in rep.measurements if m.ok]
+    best = min(ok, key=lambda m: m.run_seconds)
+    if best.run_seconds < rep.baseline.run_seconds:
+        assert rep.best_pattern == best.mapping()
+    else:
+        assert rep.best_pattern == {}
+    # every measurement carries its structured pattern end-to-end
+    for m in rep.measurements:
+        assert m.impl is not None
+        assert m.pattern == Impl(m.impl).describe()
+
+
+def test_failing_variant_is_never_selected():
+    """A variant whose lowering fails (lower_ok=False) must be excluded
+    from ranking, measurement, and selection."""
+    name = f"fail_{_counter[0]}"
+    _counter[0] += 1
+    register_variant(name, "ref")(_slow_ref)
+    register_variant(name, "offload")(lambda x: x * 2.0)
+
+    @register_variant(name, "pallas")
+    def _bad(x):
+        raise RuntimeError("no pallas lowering on this backend")
+
+    def build(impl):
+        def run(x):
+            return dispatch(name, impl, x)
+        return run
+
+    prog = OffloadableProgram(
+        name="failvar",
+        regions=[Region(name, variants(name)["ref"],
+                        (jax.ShapeDtypeStruct((128, 128), jnp.float32),))],
+        build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=1)
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0,
+                                      max_measurements=4)).plan(
+        prog, jax.random.PRNGKey(0))
+    assert (name, "pallas") not in rep.eff_pairs
+    assert all(m.mapping().get(name) != "pallas" for m in rep.measurements)
+    assert rep.best_pattern.get(name) != "pallas"
+    cand = next(c for c in rep.candidates if c.region == name)
+    assert not cand.variant_estimates["pallas"].lower_ok
+    assert cand.variant_estimates["offload"].lower_ok
+
+
+# ---------------------------------------------------------------------------
 # Beyond-paper: block-level planning over an assigned arch (paper §6 future
 # work: offload of larger functional blocks)
 # ---------------------------------------------------------------------------
 def test_block_level_planning_on_ssm_arch():
-    import sys, os
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "examples"))
-    from offload_transformer import make_lm_program
+    from repro.models.offload_program import make_lm_program
 
     prog = make_lm_program("falcon-mamba-7b", batch=1, seq=32)
     rep = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
         prog, jax.random.PRNGKey(0))
-    # the SSM scan is the arch's hot region and must survive both filters
+    # the SSM scan is the arch's hot region: it tops the AI ranking and every
+    # registered destination is precompiled in the mixed-destination Step 3
     assert rep.ai_selected[0] == "ssm_scan"
-    assert "ssm_scan" in rep.eff_selected
+    cand = next(c for c in rep.candidates if c.region == "ssm_scan")
+    assert set(cand.variant_estimates) >= {"offload", "seq", "pallas"}
+    if rep.eff_selected:
+        # some destination fits this backend: the hot region leads survivors
+        assert "ssm_scan" in rep.eff_selected
+    else:
+        # no destination is placeable here (the Pallas kernel cannot lower on
+        # this container and the XLA variants' chunk working set exceeds the
+        # VMEM cap at full shapes): the planner must fall back to all-ref
+        # rather than select an overweight or unloadable variant
+        assert all(not est.lower_ok
+                   or est.resource_fraction > PlannerConfig().resource_cap
+                   for est in cand.variant_estimates.values())
+        assert rep.best_pattern == {}
+        assert rep.speedup == 1.0
     assert rep.baseline is not None and rep.baseline.ok

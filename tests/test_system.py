@@ -23,6 +23,10 @@ from repro.runtime.loop import LoopConfig, run_training
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# whole-module marker: these end-to-end runs dominate suite wall-clock
+# (train loops, subprocess dry-runs); CI can deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def _pcfg():
     return ParallelismConfig(tp=True, fsdp=False, remat="none", microbatch=1)
