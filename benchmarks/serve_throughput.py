@@ -1,0 +1,80 @@
+"""Serving throughput benchmark: tokens/sec + TTFT across slot counts.
+
+Drives ``ServeEngine`` on a reduced config with a mixed-length request
+stream (exercising the power-of-two prefill buckets) and reports, per slot
+count: aggregate decode throughput, TTFT, queue wait, and how many prefill
+compilations the bucket scheme paid for how many distinct prompt lengths.
+
+Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
+          [--arch qwen2-72b] [--slots 1,4] [--requests 12]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config
+from repro.models import factory as F
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import SamplingParams
+
+# mixed prompt lengths: 6 distinct lengths over 2 buckets (8, 16)
+PROMPT_LENGTHS = (5, 7, 9, 11, 13, 15)
+
+
+def bench_one(cfg, params, *, slots: int, requests: int, new_tokens: int,
+              ctx: int, temperature: float, seed: int) -> dict:
+    engine = ServeEngine(cfg, params, slots=slots, ctx=ctx, seed=seed)
+    sampling = SamplingParams(temperature=temperature)
+    key = jax.random.PRNGKey(seed)
+    for r in range(requests):
+        plen = PROMPT_LENGTHS[r % len(PROMPT_LENGTHS)]
+        tokens, frontend = F.synthetic_request(cfg, plen,
+                                               jax.random.fold_in(key, r))
+        engine.submit(tokens, max_new_tokens=new_tokens, sampling=sampling,
+                      frontend=frontend)
+    t0 = time.perf_counter()
+    engine.run_to_completion()
+    wall = time.perf_counter() - t0
+    s = engine.stats()
+    s["wall_s"] = wall
+    s["tok_per_s"] = s["generated_tokens"] / wall
+    return s
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--slots", default="1,4",
+                    help="comma-separated slot counts to sweep")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--ctx", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = F.init_params(cfg, jax.random.PRNGKey(args.seed))
+    slot_counts = [int(s) for s in args.slots.split(",")]
+
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"new_tokens={args.new_tokens} ctx={args.ctx} "
+          f"prompt_lengths={sorted(set(PROMPT_LENGTHS))}")
+    print(f"{'slots':>5} | {'tok/s':>8} | {'ttft ms (mean/p50)':>18} | "
+          f"{'wait ms':>8} | {'prefill compiles':>16}")
+    for slots in slot_counts:
+        s = bench_one(cfg, params, slots=slots, requests=args.requests,
+                      new_tokens=args.new_tokens, ctx=args.ctx,
+                      temperature=args.temperature, seed=args.seed)
+        print(f"{slots:>5} | {s['tok_per_s']:>8.1f} | "
+              f"{s['ttft_s_mean']*1e3:>8.1f} / {s['ttft_s_p50']*1e3:>6.1f} | "
+              f"{s['queue_wait_s_mean']*1e3:>8.1f} | "
+              f"{s['prefill_traces']:>4} for buckets {s['buckets']}")
+
+
+if __name__ == "__main__":
+    main()

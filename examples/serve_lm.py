@@ -1,5 +1,5 @@
-"""Serving driver: batched greedy decoding with prefill + KV-cache decode
-steps — the serve-side path the decode_32k / long_500k dry-run cells lower.
+"""Serving driver: continuous-batching decode through ``ServeEngine`` —
+bucketed prefill, admission control, pluggable sampling, lifecycle stats.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
 """
@@ -10,55 +10,52 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import factory as F
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import SamplingParams
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="recurrentgemma-2b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
-    batch = F.synthetic_batch(cfg, args.batch, args.prompt_len, key)
-    ctx = args.prompt_len + args.new_tokens
+    ctx = args.prompt_len + args.new_tokens + cfg.n_front
 
-    prefill = jax.jit(F.make_prefill_step(cfg, ctx=ctx))
-    serve = jax.jit(F.make_serve_step(cfg))
+    engine = ServeEngine(cfg, params, slots=args.slots, ctx=ctx,
+                         seed=args.seed)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    for r in range(args.requests):
+        tokens, frontend = F.synthetic_request(cfg, args.prompt_len,
+                                               jax.random.fold_in(key, r))
+        engine.submit(tokens, max_new_tokens=args.new_tokens,
+                      sampling=sampling, frontend=frontend)
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    n_front = cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0
+    t0 = time.perf_counter()
+    done = engine.run_to_completion()
+    wall = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    generated = [tok]
-    t1 = time.time()
-    for i in range(args.new_tokens - 1):
-        pos = jnp.full((args.batch,), args.prompt_len + n_front + i, jnp.int32)
-        logits, cache = serve(params, cache, tok, pos)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
-
-    out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} batch={args.batch}")
-    print(f"prefill ({args.prompt_len} tokens): {t_prefill*1e3:.1f} ms "
-          f"(includes compile)")
-    per_tok = t_decode / max(args.new_tokens - 1, 1)
-    print(f"decode: {per_tok*1e3:.2f} ms/token "
-          f"({args.batch/per_tok:.1f} tokens/s aggregate)")
-    print("generated token ids (first sequence):",
-          [int(t) for t in out[0][:16]])
+    s = engine.stats()
+    print(f"arch={cfg.name} slots={args.slots} requests={args.requests}")
+    print(f"ttft: {s['ttft_s_mean']*1e3:.1f} ms mean (includes compile on "
+          f"first request per bucket)")
+    print(f"decode: {s['decode_tps_mean']:.1f} tok/s/request mean | "
+          f"{s['generated_tokens']/wall:.1f} tok/s aggregate")
+    print(f"prefill compilations: {s['prefill_traces']} "
+          f"(buckets {s['buckets']})")
+    print("generated token ids (first request):", done[0].generated[:16])
 
 
 if __name__ == "__main__":

@@ -87,6 +87,12 @@ class ModelConfig:
         return self.ssm_expand * self.d_model
 
     @property
+    def n_front(self) -> int:
+        """Frontend tokens prepended to the decoder sequence (siglip patch
+        embeddings; audio frames feed the encoder instead, not the prefix)."""
+        return self.frontend_seq if self.frontend == "siglip_stub" else 0
+
+    @property
     def attention_free(self) -> bool:
         return self.family == "ssm"
 

@@ -286,8 +286,13 @@ class AutoOffloader:
             round1.append((region, top.variant, m))
             budget -= 1
 
+        # A failed baseline measures as inf, which would promote EVERY ok
+        # round-1 measurement to "winner" — combinations must only be built
+        # against a meaningful reference.
+        base_ok = report.baseline.ok
         winners = [(r, v) for r, v, m in round1
-                   if m.ok and m.run_seconds < report.baseline.run_seconds]
+                   if m.ok and base_ok
+                   and m.run_seconds < report.baseline.run_seconds]
         # round 2: mixed cross-region combinations of round-1 winners
         # (largest combo first), resource-capped on the chosen variants
         for size in range(len(winners), 1, -1):
@@ -318,9 +323,14 @@ class AutoOffloader:
         ok_measurements = [m for m in report.measurements if m.ok]
         best = min(ok_measurements, key=lambda m: m.run_seconds,
                    default=None)
-        if best is not None and best.run_seconds < report.baseline.run_seconds:
+        if best is not None and (not base_ok
+                                 or best.run_seconds < report.baseline.run_seconds):
             report.best_pattern = best.mapping()
-            report.speedup = report.baseline.run_seconds / best.run_seconds
+            # a failed baseline gives no meaningful reference: still select
+            # the fastest working pattern, but never claim a speedup (and
+            # _sound() keeps this search out of the plan cache)
+            report.speedup = (report.baseline.run_seconds / best.run_seconds
+                              if base_ok else 1.0)
         else:
             report.best_pattern = {}
             report.speedup = 1.0

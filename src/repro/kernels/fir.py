@@ -23,8 +23,12 @@ from jax.experimental import pallas as pl
 
 
 def _fir_kernel(xr_ref, xi_ref, hr_ref, hi_ref, yr_ref, yi_ref, *,
-                n_taps: int, block_n: int, tap_unroll: int):
-    # x block: [1, block_n + n_taps - 1] (halo); h: [1, n_taps]; y: [1, block_n]
+                n_taps: int, block_n: int, tap_unroll: int,
+                whole_row: bool = False):
+    # x block: [1, block_n + n_taps - 1] (halo) — or, when this Pallas build
+    # has no Element indexing for overlapping blocks, the whole padded row
+    # (whole_row=True) with the tile offset recovered from the grid position.
+    base = pl.program_id(1) * block_n if whole_row else 0
     acc_r = jnp.zeros((1, block_n), jnp.float32)
     acc_i = jnp.zeros((1, block_n), jnp.float32)
 
@@ -35,9 +39,9 @@ def _fir_kernel(xr_ref, xi_ref, hr_ref, hi_ref, yr_ref, yi_ref, *,
             hr = hr_ref[0, k]
             hi = hi_ref[0, k]
             # x window aligned so tap k multiplies x[n + K - 1 - k]
-            off = n_taps - 1 - k
-            xr = pl.load(xr_ref, (0, pl.ds(off, block_n)))
-            xi = pl.load(xi_ref, (0, pl.ds(off, block_n)))
+            off = base + n_taps - 1 - k
+            xr = pl.load(xr_ref, (pl.ds(0, 1), pl.ds(off, block_n)))[0]
+            xi = pl.load(xi_ref, (pl.ds(0, 1), pl.ds(off, block_n)))[0]
             ar = ar + hr * xr - hi * xi
             ai = ai + hr * xi + hi * xr
         return ar, ai
@@ -68,16 +72,24 @@ def fir_filter_bank(x: jax.Array, h: jax.Array, *, block_n: int = 512,
     grid = (m, n // block_n)
     halo = block_n + pad
 
-    # x blocks OVERLAP (K-1 halo), so the sample dim uses pl.Element indexing:
-    # block j covers elements [j*block_n, j*block_n + halo).
-    def x_map(i, j):
-        return (i, j * block_n)      # (block row, ELEMENT column start)
+    if hasattr(pl, "Element"):
+        # x blocks OVERLAP (K-1 halo), so the sample dim uses pl.Element
+        # indexing: block j covers elements [j*block_n, j*block_n + halo).
+        def x_map(i, j):
+            return (i, j * block_n)  # (block row, ELEMENT column start)
 
-    x_spec = pl.BlockSpec((1, pl.Element(halo, (0, pad))), x_map)
+        x_spec = pl.BlockSpec((1, pl.Element(halo, (0, pad))), x_map)
+        whole_row = False
+    else:
+        # older Pallas: no Element indexing for overlapping blocks — keep the
+        # whole padded row in VMEM ((N+K-1)*4B per plane, ~16 KB at the paper
+        # shapes) and slice the halo window inside the kernel.
+        x_spec = pl.BlockSpec((1, n + pad), lambda i, j: (i, 0))
+        whole_row = True
 
     yr, yi = pl.pallas_call(
         functools.partial(_fir_kernel, n_taps=k, block_n=block_n,
-                          tap_unroll=tap_unroll),
+                          tap_unroll=tap_unroll, whole_row=whole_row),
         grid=grid,
         in_specs=[
             x_spec,

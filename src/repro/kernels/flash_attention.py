@@ -39,8 +39,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_len: int, block_q: int,
 
     def body(ik, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(ik * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.ds(ik * block_k, block_k), slice(None)))
+        # leading batch dim sliced (not int-indexed): int indices in pl.load
+        # tuples are rejected by some Pallas versions
+        k = pl.load(k_ref, (slice(0, 1), pl.ds(ik * block_k, block_k),
+                            slice(None)))[0]
+        v = pl.load(v_ref, (slice(0, 1), pl.ds(ik * block_k, block_k),
+                            slice(None)))[0]
         k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
         s = jnp.dot(q, k.astype(jnp.float32).T,
                     preferred_element_type=jnp.float32)        # [bq, bk]

@@ -20,10 +20,10 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
     h = h0_ref[0].astype(jnp.float32)                      # [bc]
 
     def chunk_body(tc, h):
-        a_c = pl.load(a_ref, (0, pl.ds(tc * time_chunk, time_chunk),
-                              slice(None))).astype(jnp.float32)
-        b_c = pl.load(b_ref, (0, pl.ds(tc * time_chunk, time_chunk),
-                              slice(None))).astype(jnp.float32)
+        a_c = pl.load(a_ref, (slice(0, 1), pl.ds(tc * time_chunk, time_chunk),
+                              slice(None)))[0].astype(jnp.float32)
+        b_c = pl.load(b_ref, (slice(0, 1), pl.ds(tc * time_chunk, time_chunk),
+                              slice(None)))[0].astype(jnp.float32)
 
         def step(t, carry):
             h, out = carry
@@ -33,8 +33,8 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
 
         out0 = jnp.zeros((time_chunk, h.shape[-1]), jnp.float32)
         h, out = jax.lax.fori_loop(0, time_chunk, step, (h, out0))
-        pl.store(y_ref, (0, pl.ds(tc * time_chunk, time_chunk), slice(None)),
-                 out.astype(y_ref.dtype))
+        pl.store(y_ref, (slice(0, 1), pl.ds(tc * time_chunk, time_chunk),
+                         slice(None)), out.astype(y_ref.dtype)[None])
         return h
 
     h = jax.lax.fori_loop(0, seq_len // time_chunk, chunk_body, h)

@@ -23,12 +23,12 @@ def _ssm_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
 
     def chunk_body(tc, h):
         t0 = tc * time_chunk
-        a_c = pl.load(a_ref, (0, pl.ds(t0, time_chunk), slice(None),
-                              slice(None))).astype(jnp.float32)   # [T, bc, N]
-        bx_c = pl.load(bx_ref, (0, pl.ds(t0, time_chunk), slice(None),
-                                slice(None))).astype(jnp.float32)
-        c_c = pl.load(c_ref, (0, pl.ds(t0, time_chunk),
-                              slice(None))).astype(jnp.float32)   # [T, N]
+        a_c = pl.load(a_ref, (slice(0, 1), pl.ds(t0, time_chunk), slice(None),
+                              slice(None)))[0].astype(jnp.float32)  # [T, bc, N]
+        bx_c = pl.load(bx_ref, (slice(0, 1), pl.ds(t0, time_chunk), slice(None),
+                                slice(None)))[0].astype(jnp.float32)
+        c_c = pl.load(c_ref, (slice(0, 1), pl.ds(t0, time_chunk),
+                              slice(None)))[0].astype(jnp.float32)  # [T, N]
 
         def step(t, carry):
             h, ys = carry
@@ -39,8 +39,8 @@ def _ssm_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hf_ref, *, seq_len: int,
 
         ys0 = jnp.zeros((time_chunk, h.shape[0]), jnp.float32)
         h, ys = jax.lax.fori_loop(0, time_chunk, step, (h, ys0))
-        pl.store(y_ref, (0, pl.ds(t0, time_chunk), slice(None)),
-                 ys.astype(y_ref.dtype))
+        pl.store(y_ref, (slice(0, 1), pl.ds(t0, time_chunk), slice(None)),
+                 ys.astype(y_ref.dtype)[None])
         return h
 
     h = jax.lax.fori_loop(0, seq_len // time_chunk, chunk_body, h)

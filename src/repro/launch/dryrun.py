@@ -91,7 +91,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
                                  donate_argnums=(0,))
                 lowered = jitted.lower(state_abs, batch_abs)
         elif shape.kind == "prefill":
-            ctx = shape.seq_len + (cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0)
+            ctx = shape.seq_len + cfg.n_front
             step = RS.make_prefill_step(cfg, ctx=ctx, impl=impl)
             params_abs = F.abstract_params(cfg)
             batch_abs = F.batch_spec(cfg, shape)

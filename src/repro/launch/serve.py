@@ -1,8 +1,9 @@
-"""Production serving launcher: batched prefill + greedy decode loop with
-KV caches — the code path the decode_32k / long_500k dry-run cells lower.
+"""Production serving launcher, driven end-to-end by the continuous-batching
+``ServeEngine`` — the same code path the engine tests and the planner's
+``--auto-offload`` patterns exercise.
 
   PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
-      --reduced --batch 4 --prompt-len 64 --new-tokens 64
+      --reduced --slots 4 --prompt-len 64 --new-tokens 64
 
 With ``--auto-offload`` the launcher runs the block-level offload planner
 over the arch's regions first and serves with the selected pattern.  The
@@ -18,13 +19,14 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.plan_cache import (DEFAULT_CACHE_ENV, DEFAULT_CACHE_PATH,
                                    PlanCache)
 from repro.core.regions import Impl
 from repro.models import factory as F
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import SamplingParams
 
 
 def planned_impl(arch: str, cache: PlanCache, reps: int = 2) -> Impl:
@@ -45,11 +47,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="concurrent decode slots (old --batch)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=3,
-                    help="number of batched requests to serve")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="number of requests to serve")
+    ap.add_argument("--vary-lengths", action="store_true",
+                    help="stagger prompt lengths to exercise prefill buckets")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--auto-offload", action="store_true",
                     help="plan (or reuse the cached) offload pattern first")
     ap.add_argument("--plan-cache",
@@ -64,33 +72,37 @@ def main() -> None:
         cfg = cfg.reduced()
     impl = None
     if args.auto_offload:
-        pattern = planned_impl(args.arch, PlanCache(args.plan_cache))
-        impl = Impl({**F.default_impl(cfg), **pattern})
-    key = jax.random.PRNGKey(0)
+        impl = planned_impl(args.arch, PlanCache(args.plan_cache))
+    key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
-    ctx = args.prompt_len + args.new_tokens
-    prefill = jax.jit(F.make_prefill_step(cfg, impl=impl, ctx=ctx))
-    serve = jax.jit(F.make_serve_step(cfg, impl=impl))
-    n_front = cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0
+    ctx = args.prompt_len + args.new_tokens + cfg.n_front
 
-    for req in range(args.requests):
-        batch = F.synthetic_batch(cfg, args.batch, args.prompt_len,
-                                  jax.random.fold_in(key, req))
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, batch)
-        jax.block_until_ready(logits)
-        t_pre = time.perf_counter() - t0
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        t1 = time.perf_counter()
-        for i in range(args.new_tokens - 1):
-            pos = jnp.full((args.batch,), args.prompt_len + n_front + i,
-                           jnp.int32)
-            logits, cache = serve(params, cache, tok, pos)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        jax.block_until_ready(tok)
-        per_tok = (time.perf_counter() - t1) / max(args.new_tokens - 1, 1)
-        print(f"req {req}: prefill {t_pre*1e3:7.1f} ms | decode "
-              f"{per_tok*1e3:6.2f} ms/tok | {args.batch/per_tok:8.1f} tok/s")
+    engine = ServeEngine(cfg, params, slots=args.slots, ctx=ctx,
+                         seed=args.seed, impl=impl)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    for r in range(args.requests):
+        plen = args.prompt_len
+        if args.vary_lengths:
+            plen = max(1, args.prompt_len - (r % 4) * (args.prompt_len // 4))
+        tokens, frontend = F.synthetic_request(cfg, plen,
+                                               jax.random.fold_in(key, r))
+        engine.submit(tokens, max_new_tokens=args.new_tokens,
+                      sampling=sampling, frontend=frontend)
+
+    t0 = time.perf_counter()
+    done = engine.run_to_completion()
+    wall = time.perf_counter() - t0
+    s = engine.stats()
+    for req in done:
+        print(f"req {req.rid}: prompt {req.tokens.size:4d} "
+              f"(bucket {req.bucket:4d}) | wait {req.queue_wait_s*1e3:7.1f} ms "
+              f"| ttft {req.ttft_s*1e3:7.1f} ms | decode "
+              f"{req.decode_tps:8.1f} tok/s")
+    print(f"served {s['requests_finished']} requests / "
+          f"{s['generated_tokens']} tokens in {wall:.2f} s "
+          f"({s['generated_tokens']/wall:.1f} tok/s aggregate)")
+    print(f"prefill compilations: {s['prefill_traces']} "
+          f"(buckets {s['buckets']})")
 
 
 if __name__ == "__main__":

@@ -55,7 +55,7 @@ def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     b, s = shape.global_batch, shape.seq_len
     p_sh = param_shardings(cfg, mesh, pcfg)
     batch_sh = batch_shardings(F.batch_spec(cfg, shape), mesh, pcfg)
-    ctx = s + (cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0)
+    ctx = s + cfg.n_front
     cache_sh = cache_shardings(cfg, mesh, pcfg, b, ctx)
     out = (logits_sharding(cfg, mesh, pcfg, b), cache_sh)
     return (p_sh, batch_sh), out

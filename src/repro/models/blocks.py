@@ -159,14 +159,36 @@ def attn_decode(p, x, cache, *, cfg: ModelConfig, pos, impl=None, window=0,
     return x + out.astype(x.dtype), {"k": k_c, "v": v_c, "slot_pos": sp}
 
 
-def attn_prefill_cache(p, x, *, cfg: ModelConfig, positions, window=0, ctx=None):
+def attn_prefill_cache(p, x, *, cfg: ModelConfig, positions, window=0, ctx=None,
+                       length=None):
     """Compute the KV cache contents after a prefill of x ([B, S, D] normed
-    input is recomputed here).  Returns the cache dict."""
+    input is recomputed here).  Returns the cache dict.
+
+    ``length`` (traced scalar): only positions < length are real (bucketed
+    prefill right-pads the sequence).  Slot j then holds the newest valid
+    position p with p % size == j (the same slot discipline cache_update uses
+    at decode), and unfilled slots are zeroed with slot_pos = -1 so
+    decode_attention masks them."""
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
     _, k, v = _qkv(p, h, h, cfg)
     k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
     b, hkv, s, hd = k.shape
     size = min(ctx or s, window) if window else (ctx or s)
+    if length is not None:
+        # slot j <- newest position p < length with p ≡ j (mod size); this is
+        # one formula for both the full cache (p = j when j < length) and the
+        # rotating window (the last `size` valid positions at p % size).
+        j = jnp.arange(size)
+        p_j = length - 1 - ((length - 1 - j) % size)           # [size]
+        valid = p_j >= 0
+        gather = jnp.clip(p_j, 0, s - 1)
+        kc = jnp.take(k, gather, axis=2)
+        vc = jnp.take(v, gather, axis=2)
+        m = valid[None, None, :, None]
+        kc = jnp.where(m, kc, jnp.zeros((), kc.dtype))
+        vc = jnp.where(m, vc, jnp.zeros((), vc.dtype))
+        sp = jnp.broadcast_to(jnp.where(valid, p_j, -1)[None, :], (b, size))
+        return {"k": kc, "v": vc, "slot_pos": sp.astype(jnp.int32)}
     if window and s > size:
         # keep last `size` positions at slots pos % size
         keep_pos = positions[:, -size:]                        # [B, size]
@@ -274,9 +296,10 @@ def ssm_cache_template(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def ssm_apply(p, x, *, cfg: ModelConfig, impl=None, state=None):
+def ssm_apply(p, x, *, cfg: ModelConfig, impl=None, state=None, length=None):
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    out, new_state = SS.mamba_block(p, h, cfg=cfg, impl=impl, state=state)
+    out, new_state = SS.mamba_block(p, h, cfg=cfg, impl=impl, state=state,
+                                    length=length)
     return x + out, new_state
 
 
@@ -315,9 +338,10 @@ def rglru_cache_template(cfg: ModelConfig, batch: int) -> dict:
     }
 
 
-def rglru_apply(p, x, *, cfg: ModelConfig, impl=None, state=None):
+def rglru_apply(p, x, *, cfg: ModelConfig, impl=None, state=None, length=None):
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    out, new_state = RG.rglru_block(p, h, cfg=cfg, impl=impl, state=state)
+    out, new_state = RG.rglru_block(p, h, cfg=cfg, impl=impl, state=state,
+                                    length=length)
     return x + out, new_state
 
 

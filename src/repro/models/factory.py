@@ -110,6 +110,17 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 # ---------------------------------------------------------------------------
 # Synthetic batches (smoke tests / examples)
 # ---------------------------------------------------------------------------
+def synthetic_request(cfg: ModelConfig, seq: int, key: jax.Array):
+    """Single-sequence synthetic serving request: (tokens [S] int32,
+    frontend patch/frame embeddings [S_f, D_f] or None) — the shapes
+    ``ServeEngine.submit`` takes.  Shared by the serving drivers so the
+    frontend-key fallback lives in one place."""
+    b = synthetic_batch(cfg, 1, seq, key)
+    fe = b.get("patches", b.get("frames"))
+    return (np.asarray(b["tokens"][0]),
+            None if fe is None else np.asarray(fe[0]))
+
+
 def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array) -> dict:
     kt, kf = jax.random.split(key)
     out = {"tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size, jnp.int32)}
@@ -151,6 +162,41 @@ def make_prefill_step(cfg: ModelConfig, impl: Optional[Impl] = None,
         fe = batch.get("patches", batch.get("frames"))
         return lm.prefill(params, batch["tokens"], cfg=cfg, impl=impl,
                           frontend_emb=fe, ctx=ctx)
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Bucketed prefill (serving engine)
+# ---------------------------------------------------------------------------
+PREFILL_BUCKET_MIN = 8      # smallest padded prompt length
+
+
+def prefill_bucket(n: int, max_len: int, min_bucket: int = PREFILL_BUCKET_MIN) -> int:
+    """Padded length for an ``n``-token prompt: the smallest power of two
+    >= n (floored at ``min_bucket``), capped at ``max_len`` (cache capacity
+    minus any frontend prefix).  Distinct prompt lengths that share a bucket
+    share one compiled prefill — the per-shape retrace this replaces is the
+    serving analogue of the per-pattern recompile arXiv 2004.08548 warns
+    naive placement pays."""
+    if n > max_len:
+        raise ValueError(f"prompt length {n} exceeds bucket cap {max_len}")
+    b = max(min_bucket, 1 << max(n - 1, 0).bit_length())
+    return min(b, max_len)      # b >= n, and the guard keeps max_len >= n
+
+
+def make_bucketed_prefill_step(cfg: ModelConfig, impl: Optional[Impl] = None,
+                               ctx: Optional[int] = None):
+    """Prefill step over right-padded prompts: ``(params, batch, length)``
+    where batch['tokens'] is [B, bucket] and ``length`` is the traced scalar
+    count of real tokens.  Position/length masking inside ``lm.prefill``
+    makes logits and caches exact for the real tokens, so the engine
+    compiles once per bucket instead of once per distinct prompt length."""
+    impl = impl if impl is not None else default_impl(cfg)
+
+    def prefill_step(params, batch, length):
+        fe = batch.get("patches", batch.get("frames"))
+        return lm.prefill(params, batch["tokens"], cfg=cfg, impl=impl,
+                          frontend_emb=fe, ctx=ctx, length=length)
     return prefill_step
 
 

@@ -162,9 +162,12 @@ def _apply_unit_seq(unit_params, x, *, cfg, kinds, positions, impl, enc_out,
 
 
 def _apply_unit_seq_exact(unit_params, x, *, cfg, kinds, positions, impl,
-                          enc_out, enc_positions, ctx):
+                          enc_out, enc_positions, ctx, length=None):
     """Like _apply_unit_seq but computes the attention caches from the exact
-    pre-block residual stream (used by prefill)."""
+    pre-block residual stream (used by prefill).  ``length`` (traced scalar):
+    positions >= length are right-padding (bucketed prefill) — attention is
+    already exact under a causal mask, so padding only has to be masked out
+    of the KV caches and the recurrent state updates."""
     cache_out: dict = {}
     for i, kind in enumerate(kinds):
         p = unit_params[f"l{i}"]
@@ -173,7 +176,7 @@ def _apply_unit_seq_exact(unit_params, x, *, cfg, kinds, positions, impl,
             window = cfg.attn_window if kind == LOCAL_ATTN else 0
             c["attn"] = B.attn_prefill_cache(p["attn"], x, cfg=cfg,
                                              positions=positions, window=window,
-                                             ctx=ctx)
+                                             ctx=ctx, length=length)
             x = B.attn_apply(p["attn"], x, cfg=cfg, positions=positions,
                              impl=impl, causal=True, window=window)
             if cfg.cross_attention:
@@ -185,10 +188,11 @@ def _apply_unit_seq_exact(unit_params, x, *, cfg, kinds, positions, impl,
                                  impl=impl, causal=False, kv_src=enc_out,
                                  kv_positions=enc_positions)
         elif kind == RGLRU:
-            x, st = B.rglru_apply(p["rglru"], x, cfg=cfg, impl=impl)
+            x, st = B.rglru_apply(p["rglru"], x, cfg=cfg, impl=impl,
+                                  length=length)
             c["rglru"] = st
         elif kind == SSM:
-            x, st = B.ssm_apply(p["ssm"], x, cfg=cfg, impl=impl)
+            x, st = B.ssm_apply(p["ssm"], x, cfg=cfg, impl=impl, length=length)
             c["ssm"] = st
         if cfg.d_ff:
             if cfg.is_moe and kind in (ATTN, LOCAL_ATTN):
@@ -358,13 +362,21 @@ def loss_fn(params, batch, *, cfg: ModelConfig, impl=None, remat: str = "none"):
 
 
 def prefill(params, tokens, *, cfg: ModelConfig, impl=None, frontend_emb=None,
-            ctx: Optional[int] = None):
+            ctx: Optional[int] = None, length=None):
     """Prefill: forward + exact KV/state caches.  Returns (logits_last, cache).
 
-    ctx: cache capacity (>= prompt length); defaults to prompt length."""
+    ctx: cache capacity (>= prompt length); defaults to prompt length.
+    length: traced scalar count of REAL prompt tokens when ``tokens`` is
+    right-padded to a bucket (serving-engine bucketed prefill).  The returned
+    logits are then taken at the last real position and the caches are masked
+    so they are identical to an unpadded prefill of ``length`` tokens (for
+    token-routed MoE layers identity holds per bucket — routing capacity sees
+    the padded length).  None = every token is real (existing behavior)."""
     x, n_front = _embed_inputs(params, cfg, tokens, frontend_emb)
     bsz, s_tot = x.shape[:2]
     ctx = max(ctx or s_tot, s_tot)   # frontend prefix counts toward capacity
+    # the frontend prefix is always real: valid positions are [0, n_front+length)
+    valid = None if length is None else length + n_front
     positions = jnp.broadcast_to(jnp.arange(s_tot, dtype=jnp.int32)[None],
                                  (bsz, s_tot))
     enc_out = enc_pos = None
@@ -379,7 +391,8 @@ def prefill(params, tokens, *, cfg: ModelConfig, impl=None, frontend_emb=None,
         out, c = _apply_unit_seq_exact(unit_params, carry, cfg=cfg,
                                        kinds=unit_kinds, positions=positions,
                                        impl=impl, enc_out=enc_out,
-                                       enc_positions=enc_pos, ctx=ctx)
+                                       enc_positions=enc_pos, ctx=ctx,
+                                       length=valid)
         return out, c
 
     x, stack_cache = jax.lax.scan(unit_body, x, params["stack"])
@@ -387,11 +400,16 @@ def prefill(params, tokens, *, cfg: ModelConfig, impl=None, frontend_emb=None,
     if tail_kinds:
         x, tail_cache = _apply_unit_seq_exact(
             params["tail"], x, cfg=cfg, kinds=tail_kinds, positions=positions,
-            impl=impl, enc_out=enc_out, enc_positions=enc_pos, ctx=ctx)
+            impl=impl, enc_out=enc_out, enc_positions=enc_pos, ctx=ctx,
+            length=valid)
         cache["tail"] = tail_cache
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits_last = L.unembed(x[:, -1:], table, cfg.tie_embeddings)
+    if valid is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    logits_last = L.unembed(x_last, table, cfg.tie_embeddings)
     return logits_last, cache
 
 

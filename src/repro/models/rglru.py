@@ -82,13 +82,22 @@ def rglru_gates(params, x: jax.Array):
     return a, b
 
 
-def rglru_block(params, x, *, cfg, impl=None, state=None):
-    """Griffin recurrent block.  x: [B, S, D_model] -> (y, new_state)."""
+def rglru_block(params, x, *, cfg, impl=None, state=None, length=None):
+    """Griffin recurrent block.  x: [B, S, D_model] -> (y, new_state).
+
+    ``length`` (traced scalar): positions >= length are right-padding — their
+    recurrence steps are masked to the identity (a=1, b=0) so the final state
+    is exactly the state after ``length`` real tokens (bucketed prefill)."""
     branch = x @ params["w_branch"]                            # [B, S, d_rnn]
     gate = x @ params["w_gate"]
     conv_state = None if state is None else state["conv"]
-    branch, new_conv = causal_depthwise_conv(branch, params["conv_w"], conv_state)
+    branch, new_conv = causal_depthwise_conv(branch, params["conv_w"], conv_state,
+                                             length=length)
     a, b = rglru_gates(params, branch)
+    if length is not None:
+        pad = (jnp.arange(x.shape[1]) >= length)[None, :, None]
+        a = jnp.where(pad, 1.0, a)
+        b = jnp.where(pad, 0.0, b)
     h0 = (jnp.zeros((x.shape[0], branch.shape[-1]), jnp.float32)
           if state is None else state["h"].astype(jnp.float32))
     h_all, h_f = dispatch("rglru_scan", impl, a.astype(x.dtype), b.astype(x.dtype), h0)

@@ -23,8 +23,14 @@ from repro.core.regions import register_variant
 # ---------------------------------------------------------------------------
 # Depthwise causal conv (kernel size K, shift-and-add formulation)
 # ---------------------------------------------------------------------------
-def causal_depthwise_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+def causal_depthwise_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None,
+                          length: jax.Array | None = None):
     """x: [B, S, D]; w: [K, D]; state: [B, K-1, D] trailing context or None.
+
+    ``length`` (traced scalar): only the first ``length`` positions of x are
+    real — the returned state is then the K-1 inputs *ending at* position
+    ``length`` (bucketed prefill right-pads x, and the trailing context must
+    not contain padding).  None = all S positions are real.
 
     Returns (y [B, S, D], new_state [B, K-1, D])."""
     k = w.shape[0]
@@ -32,7 +38,13 @@ def causal_depthwise_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = 
         state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)                  # [B, S+K-1, D]
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(state)
+    if k <= 1:
+        new_state = jnp.zeros_like(state)
+    elif length is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        # inputs at positions [length-(K-1), length) = xp[length : length+K-1]
+        new_state = jax.lax.dynamic_slice_in_dim(xp, length, k - 1, axis=1)
     return y.astype(x.dtype), new_state
 
 
@@ -140,9 +152,12 @@ def ssm_decode_step(a, bx, c, h):
 # ---------------------------------------------------------------------------
 # Full Mamba block
 # ---------------------------------------------------------------------------
-def mamba_block(params, x, *, cfg, impl=None, state=None):
+def mamba_block(params, x, *, cfg, impl=None, state=None, length=None):
     """x: [B, S, D_model].  state: None (train) or dict(conv, h) for decode-
-    style stateful prefill.  Returns (y, new_state)."""
+    style stateful prefill.  ``length`` (traced scalar): positions >= length
+    are right-padding — their recurrence steps are masked to the identity
+    (a=1, bx=0) so the final state is exactly the state after ``length`` real
+    tokens (bucketed prefill).  Returns (y, new_state)."""
     from repro.core.regions import dispatch
 
     b, s, _ = x.shape
@@ -150,7 +165,8 @@ def mamba_block(params, x, *, cfg, impl=None, state=None):
     xz = x @ params["w_in"]                                    # [B, S, 2*Di]
     xi, z = jnp.split(xz, 2, axis=-1)
     conv_state = None if state is None else state["conv"]
-    xi, new_conv = causal_depthwise_conv(xi, params["conv_w"], conv_state)
+    xi, new_conv = causal_depthwise_conv(xi, params["conv_w"], conv_state,
+                                         length=length)
     xi = jax.nn.silu(xi)
 
     # input-dependent dt, B, C
@@ -162,6 +178,10 @@ def mamba_block(params, x, *, cfg, impl=None, state=None):
 
     a = jnp.exp(dt[..., None].astype(jnp.float32) * a_log)     # [B, S, Di, N]
     bx = (dt * xi)[..., None] * bmat[:, :, None, :]            # [B, S, Di, N]
+    if length is not None:
+        pad = (jnp.arange(s) >= length)[None, :, None, None]
+        a = jnp.where(pad, 1.0, a)
+        bx = jnp.where(pad, 0.0, bx)
     from repro.parallel.ctx import constrain
     a = constrain(a, ("batch", None, "inner", None))
     bx = constrain(bx, ("batch", None, "inner", None))

@@ -1,21 +1,34 @@
 """Continuous-batching serving engine (slot-based, vLLM-style admission).
 
 A fixed number of decode slots share one batched KV cache.  Each engine tick:
-  1. admit queued requests into free slots (single-sequence prefill, cache
-     scattered into the slot),
+  1. admit queued requests into every free slot (bucketed single-sequence
+     prefill, cache scattered into the slot),
   2. one batched decode step for every active slot,
   3. retire finished sequences (max_new_tokens reached) and free the slots.
 
 The correctness contract (test-asserted): a request's tokens are identical
 whether it runs alone or interleaved with arbitrary other requests — slot
-isolation comes from per-slot cache rows, positions and sampled tokens.
+isolation comes from per-slot cache rows, positions, and per-request sampling
+keys (seed, rid, step).
 
-This runs the same `prefill`/`decode_step` the dry-run lowers, so it is the
-serving layer for any assigned arch (GQA KV caches, rotating local windows,
-SSM/RG-LRU states all behave as cache pytrees here).
+Bucketed prefill: prompts are right-padded to power-of-two length buckets and
+prefilled with a traced ``length`` scalar (``factory.make_bucketed_prefill_
+step``), so the engine compiles one prefill per *bucket* instead of one per
+distinct prompt length — the serving analogue of the per-pattern recompile
+the offload-proposal paper (arXiv 2004.08548) warns naive placement pays.
+``prefill_traces`` counts actual compilations for observability.
+
+Admission control: ``submit()`` rejects requests whose prompt + frontend
+prefix + max_new_tokens cannot fit the cache (the overflow used to silently
+corrupt cache rows via the decode-step ``min(pos, ctx-1)`` slot clamp).
+
+This runs the same ``prefill``/``decode_step`` the dry-run lowers, so it is
+the serving layer for any assigned arch (GQA KV caches, rotating local
+windows, SSM/RG-LRU states all behave as cache pytrees here).
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -27,6 +40,22 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.regions import Impl
 from repro.models import factory as F
+from repro.serving.sampling import GREEDY, SamplingParams, make_sampler
+
+
+class ServeIncompleteError(RuntimeError):
+    """``run_to_completion`` ran out of ticks with work still in flight.
+
+    Carries the structured partial result: ``finished`` (completed requests)
+    and ``pending`` (rids still queued or mid-decode)."""
+
+    def __init__(self, finished: list, pending: list[int], max_ticks: int):
+        self.finished = finished
+        self.pending = pending
+        super().__init__(
+            f"run_to_completion exhausted max_ticks={max_ticks} with "
+            f"{len(pending)} request(s) unfinished (rids {pending}); "
+            f"{len(finished)} finished")
 
 
 @dataclass
@@ -34,8 +63,34 @@ class Request:
     rid: int
     tokens: np.ndarray               # prompt [S]
     max_new_tokens: int
+    sampling: SamplingParams = GREEDY
+    frontend: Optional[np.ndarray] = None   # patch/frame embeddings (no batch dim)
     generated: list = field(default_factory=list)
     done: bool = False
+    # ---- lifecycle stats (perf_counter seconds; -1 = not reached) ----
+    submit_s: float = -1.0
+    slot_s: float = -1.0             # assigned a free slot (prefill starts)
+    admit_s: float = -1.0            # prefill finished, first token emitted
+    finish_s: float = -1.0
+    bucket: int = 0                  # padded prefill length
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Seconds between submit() and assignment to a free slot (excludes
+        the request's own prefill — that is part of ttft_s)."""
+        return self.slot_s - self.submit_s if self.slot_s >= 0 else -1.0
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (queue wait + prefill + first sample)."""
+        return self.admit_s - self.submit_s if self.admit_s >= 0 else -1.0
+
+    @property
+    def decode_tps(self) -> float:
+        """Decode throughput for this request (tokens after the first)."""
+        n = len(self.generated) - 1
+        dt = self.finish_s - self.admit_s
+        return n / dt if n > 0 and dt > 0 else 0.0
 
 
 def _cache_batch_axis(path) -> int:
@@ -69,25 +124,71 @@ class ServeEngine:
         self.params = params
         self.slots = slots
         self.ctx = ctx
-        self.n_front = cfg.frontend_seq if cfg.frontend == "siglip_stub" else 0
+        self.seed = seed
         if impl is not None:        # planner patterns override arch defaults
             impl = Impl({**F.default_impl(cfg), **impl})
-        self._prefill = jax.jit(F.make_prefill_step(cfg, impl=impl, ctx=ctx))
+        raw_prefill = F.make_bucketed_prefill_step(cfg, impl=impl, ctx=ctx)
+
+        def counted_prefill(params, batch, length):
+            # body runs at trace time only: counts one compilation per
+            # (bucket, frontend-structure) — the trace-count tests read this
+            self.prefill_traces += 1
+            return raw_prefill(params, batch, length)
+
+        self._prefill = jax.jit(counted_prefill)
         self._decode = jax.jit(F.make_serve_step(cfg, impl=impl))
+        self._sample = jax.jit(make_sampler(seed))
+        self._argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self.prefill_traces = 0
+        self.buckets_seen: set[int] = set()
         self.cache = F.init_cache(cfg, slots, ctx)
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int32)          # next absolute position
         self.last_tok = np.zeros(slots, np.int32)
+        # per-slot sampling state (mirrors the active request)
+        self._rids = np.zeros(slots, np.int32)
+        self._temps = np.zeros(slots, np.float32)
+        self._top_ks = np.zeros(slots, np.int32)
         self.finished: list[Request] = []
         self._next_rid = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    def _request_n_front(self, frontend) -> int:
+        """Frontend tokens prepended to the decoder sequence (paligemma
+        patch embeddings).  Whisper frames feed the encoder, not the
+        decoder prefix."""
+        return self.cfg.n_front if frontend is not None else 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               sampling: Optional[SamplingParams] = None,
+               frontend: Optional[np.ndarray] = None) -> int:
+        """Queue a request.  Raises ValueError if the request cannot fit the
+        cache: prompt + frontend prefix + max_new_tokens must be <= ctx
+        (admission control — an overflow would silently overwrite the last
+        cache slot and corrupt the sequence)."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {prompt.shape}")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if self.cfg.encoder_layers and frontend is None:
+            raise ValueError(f"{self.cfg.name} is an encoder-decoder arch: "
+                             "submit() requires `frontend` frames")
+        n_front = self._request_n_front(frontend)
+        need = prompt.size + n_front + max_new_tokens
+        if need > self.ctx:
+            raise ValueError(
+                f"request needs {need} cache slots (prompt {prompt.size} + "
+                f"frontend {n_front} + max_new_tokens {max_new_tokens}) "
+                f"but ctx={self.ctx}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        req = Request(rid, prompt, max_new_tokens,
+                      sampling=sampling or GREEDY, frontend=frontend)
+        req.submit_s = time.perf_counter()
+        self.queue.append(req)
         return rid
 
     @property
@@ -95,19 +196,60 @@ class ServeEngine:
         return bool(self.queue) or any(r is not None for r in self.active)
 
     # ------------------------------------------------------------------
+    def _sample_tokens(self, logits, rids, steps, temps, top_ks) -> np.ndarray:
+        if not np.any(np.asarray(temps) > 0.0):
+            # all-greedy tick (the default workload): skip the per-slot
+            # sort + categorical work entirely
+            return np.asarray(self._argmax(logits), np.int32)
+        return np.asarray(self._sample(
+            logits, jnp.asarray(rids, jnp.int32), jnp.asarray(steps, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32)),
+            np.int32)
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        req.done = True
+        req.finish_s = time.perf_counter()
+        req.frontend = None          # only needed for prefill; don't pin the
+        self.finished.append(req)    # patch/frame array for the engine's life
+        self.active[slot] = None
+        self._temps[slot] = 0.0
+        self._top_ks[slot] = 0
+
     def _admit(self) -> None:
+        """Admit queued requests into every free slot (multiple per tick)."""
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            batch = {"tokens": jnp.asarray(req.tokens[None, :])}
-            logits, one_cache = self._prefill(self.params, batch)
+            req.slot_s = time.perf_counter()
+            n_front = self._request_n_front(req.frontend)
+            n = req.tokens.size
+            bucket = F.prefill_bucket(n, self.ctx - n_front)
+            req.bucket = bucket
+            self.buckets_seen.add(bucket)
+            padded = np.zeros(bucket, np.int32)
+            padded[:n] = req.tokens
+            batch = {"tokens": jnp.asarray(padded[None, :])}
+            if req.frontend is not None:
+                key = "patches" if self.cfg.frontend == "siglip_stub" else "frames"
+                batch[key] = jnp.asarray(req.frontend[None])
+            logits, one_cache = self._prefill(self.params, batch,
+                                              jnp.asarray(n, jnp.int32))
             self.cache = cache_insert(self.cache, one_cache, slot)
-            first = int(jnp.argmax(logits[0, -1]))
+            first = int(self._sample_tokens(
+                logits[:, -1], [req.rid], [0],
+                [req.sampling.temperature], [req.sampling.top_k])[0])
             req.generated.append(first)
+            req.admit_s = time.perf_counter()
             self.active[slot] = req
-            self.pos[slot] = len(req.tokens) + self.n_front
+            self.pos[slot] = n + n_front
             self.last_tok[slot] = first
+            self._rids[slot] = req.rid
+            self._temps[slot] = req.sampling.temperature
+            self._top_ks[slot] = req.sampling.top_k
+            if len(req.generated) >= req.max_new_tokens:
+                self._retire(slot)      # single-token request: done at prefill
 
     def _tick_decode(self) -> None:
         if not any(r is not None for r in self.active):
@@ -115,26 +257,62 @@ class ServeEngine:
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+        steps = np.asarray([len(r.generated) if r is not None else 0
+                            for r in self.active], np.int32)
+        nxt = self._sample_tokens(logits[:, -1], self._rids, steps,
+                                  self._temps, self._top_ks)
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
             self.pos[slot] += 1
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self.finished.append(req)
-                self.active[slot] = None
-                continue
             req.generated.append(int(nxt[slot]))
             self.last_tok[slot] = nxt[slot]
+            if len(req.generated) >= req.max_new_tokens:
+                self._retire(slot)
 
     def step(self) -> None:
         self._admit()
         self._tick_decode()
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+    def run_to_completion(self, max_ticks: int = 10_000, *,
+                          raise_incomplete: bool = True) -> list[Request]:
+        """Drive the engine until idle.  If ``max_ticks`` expires with work
+        still queued/active, raises ServeIncompleteError (which carries the
+        structured partial result) — or, with ``raise_incomplete=False``,
+        returns the finished list as-is (callers can inspect ``engine.busy``)."""
         ticks = 0
         while self.busy and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self.busy and raise_incomplete:
+            pending = sorted([r.rid for r in self.queue]
+                             + [r.rid for r in self.active if r is not None])
+            raise ServeIncompleteError(
+                sorted(self.finished, key=lambda r: r.rid), pending, max_ticks)
         return sorted(self.finished, key=lambda r: r.rid)
+
+    def drain_finished(self) -> list[Request]:
+        """Return and clear the finished list.  Long-lived engines serving a
+        continuous stream should drain periodically — ``finished`` otherwise
+        grows with every request ever served (``stats()`` aggregates only
+        what is currently retained)."""
+        done, self.finished = sorted(self.finished, key=lambda r: r.rid), []
+        return done
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate lifecycle stats over finished requests."""
+        done = self.finished
+        ttfts = [r.ttft_s for r in done if r.ttft_s >= 0]
+        waits = [r.queue_wait_s for r in done if r.slot_s >= 0]
+        tps = [r.decode_tps for r in done if r.decode_tps > 0]
+        return {
+            "requests_finished": len(done),
+            "generated_tokens": sum(len(r.generated) for r in done),
+            "ttft_s_mean": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_s_p50": float(np.median(ttfts)) if ttfts else 0.0,
+            "queue_wait_s_mean": float(np.mean(waits)) if waits else 0.0,
+            "decode_tps_mean": float(np.mean(tps)) if tps else 0.0,
+            "prefill_traces": self.prefill_traces,
+            "buckets": sorted(self.buckets_seen),
+        }

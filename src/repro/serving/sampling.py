@@ -1,0 +1,59 @@
+"""Pluggable token sampling for the serving engine.
+
+Greedy / temperature / top-k, applied identically at prefill-first-token and
+every decode step.  Determinism contract: the sampled token is a pure
+function of (engine seed, request id, step index, logits row) — the PRNG key
+is ``fold_in(fold_in(PRNGKey(seed), rid), step)`` — so a request samples the
+same tokens no matter which slot it lands in or what other requests are
+interleaved with it (the batched-decode analogue of the engine's slot
+isolation contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.
+
+    temperature: 0 = greedy (argmax); > 0 = softmax sampling at that
+    temperature.  top_k: 0 = full vocabulary; k > 0 restricts sampling to
+    the k highest-logit tokens (ignored under greedy)."""
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+def make_sampler(seed: int):
+    """Returns a jit-compatible ``sample(logits, rids, steps, temps, top_ks)``
+    -> int32 tokens [B].  All per-request knobs are traced arrays, so one
+    compilation serves every mix of greedy/temperature/top-k requests."""
+    base = jax.random.PRNGKey(seed)
+
+    def _one(lg, rid, step, temp, top_k):
+        lg = lg.astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(jax.random.fold_in(base, rid), step)
+        # top-k as a threshold mask: the k-th largest logit (top_k=0 -> no mask)
+        kth = jnp.sort(lg)[::-1][jnp.clip(top_k - 1, 0, lg.shape[-1] - 1)]
+        masked = jnp.where((top_k > 0) & (lg < kth), -jnp.inf, lg)
+        scaled = masked / jnp.maximum(temp, 1e-6)
+        sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy)
+
+    def sample(logits, rids, steps, temps, top_ks):
+        return jax.vmap(_one)(logits, rids, steps, temps, top_ks)
+
+    return sample

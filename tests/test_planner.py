@@ -306,6 +306,52 @@ def test_best_pattern_is_structured_mapping_of_winner():
         assert m.pattern == Impl(m.impl).describe()
 
 
+def test_failed_baseline_blocks_round2_combinations():
+    """Regression: a failed baseline measures as run_seconds=inf, which used
+    to promote EVERY ok round-1 measurement to 'winner' — round 2 then
+    measured cross-region combinations against a meaningless reference.
+    With the guard on report.baseline.ok, no combination is measured, the
+    fastest working single pattern is still selected, and no speedup is
+    claimed."""
+    tag = f"nobase_{_counter[0]}"
+    _counter[0] += 1
+    a, b = f"{tag}_a", f"{tag}_b"
+    for nm in (a, b):
+        register_variant(nm, "ref")(lambda x: x * 2.0 + 1.0)
+        register_variant(nm, "offload")(lambda x: x * 2.0 + 1.0)
+
+    def build(impl):
+        if not impl:                # the all-ref baseline build is broken
+            def boom(x):
+                raise RuntimeError("baseline build broken")
+            return boom
+
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    prog = OffloadableProgram(
+        name=tag, regions=[Region(a, lambda x: x * 2.0 + 1.0, abstract),
+                           Region(b, lambda x: x * 2.0 + 1.0, abstract)],
+        build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=2)
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0,
+                                      max_measurements=6)).plan(
+        prog, jax.random.PRNGKey(0))
+    assert rep.baseline is not None and not rep.baseline.ok
+    # both singles measured ok, but NO cross-region combination was built
+    ok_single = [m for m in rep.measurements if m.ok]
+    assert len(ok_single) >= 2
+    assert all(len(m.mapping()) <= 1 for m in rep.measurements)
+    # the fastest working pattern is still selected, with no speedup claim
+    assert len(rep.best_pattern) == 1
+    assert rep.speedup == 1.0
+    assert not AutoOffloader._sound(rep)        # and it must never be cached
+
+
 def test_failing_variant_is_never_selected():
     """A variant whose lowering fails (lower_ok=False) must be excluded
     from ranking, measurement, and selection."""
