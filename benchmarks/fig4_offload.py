@@ -18,18 +18,15 @@ Three columns per app:
 from __future__ import annotations
 
 import argparse
-import sys
 
-sys.path.insert(0, "src")
+import jax
 
-import jax                                                    # noqa: E402
-
-from repro.apps import mriq, tdfir                            # noqa: E402
-from repro.core.intensity import analyze_region               # noqa: E402
-from repro.core.plan_cache import PlanCache                   # noqa: E402
-from repro.core.planner import AutoOffloader, PlannerConfig   # noqa: E402
-from repro.core.regions import Impl                           # noqa: E402
-from repro.launch.constants import projected_tpu_seconds      # noqa: E402
+from repro.apps import mriq, tdfir
+from repro.core.intensity import analyze_region
+from repro.core.plan_cache import PlanCache
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.regions import Impl
+from repro.launch.constants import projected_tpu_seconds
 
 PAPER = {"tdfir": 4.0, "mriq": 7.1}
 

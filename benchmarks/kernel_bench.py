@@ -3,20 +3,17 @@ roofline-projected v5e time per kernel.  One row per kernel (CSV:
 name,us_per_call,derived)."""
 from __future__ import annotations
 
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax                                                    # noqa: E402
-import jax.numpy as jnp                                       # noqa: E402
-import numpy as np                                            # noqa: E402
-
-from repro.core.intensity import analyze_region               # noqa: E402
-from repro.core.regions import variants                       # noqa: E402
-from repro.launch.constants import projected_tpu_seconds      # noqa: E402
-import repro.models.blocks                                    # noqa: E402,F401 (registers ref/offload)
-import repro.kernels.ops                                      # noqa: E402,F401 (registers pallas)
+from repro.core.intensity import analyze_region
+from repro.core.regions import variants
+from repro.launch.constants import projected_tpu_seconds
+import repro.models.blocks  # noqa: F401 (registers ref/offload)
+import repro.kernels.ops  # noqa: F401 (registers pallas)
 
 
 def _time(fn, args, reps=5):

@@ -4,32 +4,69 @@ The paper reports, per app: loop statements found (tdFIR 36, MRI-Q 16),
 arithmetic-intensity narrowing to top-5, resource-efficiency narrowing to
 top-3, and <= 4 measured offload patterns.  This benchmark runs our Step 1-4
 pipeline and emits the same table: the stage widths must match the paper's
-budgets exactly (they are the planner's defaults)."""
+budgets exactly (they are the planner's defaults).
+
+With ``--json PATH`` the rows are also written as a BENCH_*.json document so
+CI can archive them as an artifact.
+
+Run:  PYTHONPATH=src python -m benchmarks.loop_extraction [--json PATH]
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 
-sys.path.insert(0, "src")
+import jax
 
-import jax                                                    # noqa: E402
-
-from repro.apps import mriq, tdfir                            # noqa: E402
-from repro.core.planner import AutoOffloader, PlannerConfig   # noqa: E402
+from repro.apps import mriq, tdfir
+from repro.core.planner import AutoOffloader, PlannerConfig
 
 
-def main() -> None:
-    print("app,source_loops,jaxpr_loops,regions,after_ai(a<=5),"
-          "after_eff(c<=3),measured(d<=4)")
+def run(reps: int = 2) -> list[dict]:
+    rows = []
     for name, make in (("tdfir", tdfir.make_program), ("mriq", mriq.make_program)):
         prog = make()
-        rep = AutoOffloader(PlannerConfig(reps=2)).plan(prog, jax.random.PRNGKey(0))
-        print(f"{name},{rep.source_loop_count},{rep.jaxpr_loop_count},"
-              f"{len(rep.candidates)},{len(rep.ai_selected)},"
-              f"{len(rep.eff_selected)},{len(rep.measurements)}")
-        assert len(rep.ai_selected) <= 5
-        assert len(rep.eff_selected) <= 3
-        assert len(rep.measurements) <= 4
+        rep = AutoOffloader(PlannerConfig(reps=reps)).plan(prog,
+                                                           jax.random.PRNGKey(0))
+        rows.append({
+            "app": name,
+            "source_loops": rep.source_loop_count,
+            "jaxpr_loops": rep.jaxpr_loop_count,
+            "regions": len(rep.candidates),
+            "after_ai": len(rep.ai_selected),
+            "after_eff": len(rep.eff_selected),
+            "measured": len(rep.measurements),
+            "strategy": rep.strategy,
+            "speedup": rep.speedup,
+        })
+    return rows
+
+
+def main(json_path: str | None = None, reps: int = 2) -> list[dict]:
+    rows = run(reps=reps)
+    print("app,source_loops,jaxpr_loops,regions,after_ai(a<=5),"
+          "after_eff(c<=3),measured(d<=4)")
+    for r in rows:
+        print(f"{r['app']},{r['source_loops']},{r['jaxpr_loops']},"
+              f"{r['regions']},{r['after_ai']},{r['after_eff']},"
+              f"{r['measured']}")
+        assert r["after_ai"] <= 5
+        assert r["after_eff"] <= 3
+        assert r["measured"] <= 4
+    if json_path:
+        doc = {"section": "conditions",
+               "backend": jax.default_backend(),
+               "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_*.json-style output here")
+    ap.add_argument("--reps", type=int, default=2)
+    a = ap.parse_args()
+    main(json_path=a.json, reps=a.reps)

@@ -14,12 +14,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
-sys.path.insert(0, "src")
-
-from repro.configs import SHAPES, get_config                      # noqa: E402
-from repro.launch.constants import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16)  # noqa: E402
+from repro.configs import SHAPES, get_config
+from repro.launch.constants import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
 
 
 def model_flops(arch: str, shape_name: str) -> float:

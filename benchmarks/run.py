@@ -2,10 +2,15 @@
 
   fig4          paper Fig. 4 (tdFIR / MRI-Q automatic-offload speedups)
   conditions    paper §5.1.2 evaluation-conditions table (loop narrowing)
+  strategies    staged vs genetic vs exhaustive Step-4 search at equal budget
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
   roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--section NAME]
+With ``--json`` the conditions and strategies sections also write
+``BENCH_<section>.json`` documents (CI uploads them as artifacts to track
+the perf trajectory across commits).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--section NAME] [--json]
 """
 from __future__ import annotations
 
@@ -13,20 +18,34 @@ import argparse
 import os
 import sys
 
-sys.path.insert(0, "src")
-
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "fig4", "conditions", "kernels", "roofline"])
+                    choices=["all", "fig4", "conditions", "strategies",
+                             "kernels", "roofline"])
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<section>.json next to the cwd for the "
+                         "sections that support it")
+    ap.add_argument("--budget", type=int, default=4,
+                    help="strategies section: measurement budget d")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="strategies section: timing reps per pattern")
     ap.add_argument("--dryrun-jsonl", default=None)
     args = ap.parse_args()
 
     if args.section in ("all", "conditions"):
         print("== paper §5.1.2 conditions (loop extraction & narrowing) ==")
         from benchmarks import loop_extraction
-        loop_extraction.main()
+        loop_extraction.main(
+            json_path="BENCH_conditions.json" if args.json else None)
+        print()
+    if args.section in ("all", "strategies"):
+        print("== search strategies (staged vs genetic vs exhaustive) ==")
+        from benchmarks import strategies
+        strategies.main(
+            budget=args.budget, reps=args.reps,
+            json_path="BENCH_strategies.json" if args.json else None)
         print()
     if args.section in ("all", "fig4"):
         print("== paper Fig. 4 (automatic offload speedup) ==")

@@ -4,17 +4,15 @@ Scaling efficiency = t_single / t_multi for the dominant roofline term
 (fixed global batch, so perfect weak scaling across the pod axis would halve
 every per-chip term: efficiency 2.0 = ideal; < 2.0 measures the cross-pod
 collective overhead the 'pod' axis adds).
+
+Run:  PYTHONPATH=src python -m benchmarks.scaling [--in results/....jsonl]
+(module form required: this script imports the ``benchmarks`` package)
 """
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 
-sys.path.insert(0, "src")
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-
-from benchmarks.roofline import load_rows  # noqa: E402
+from benchmarks.roofline import load_rows
 
 
 def main() -> None:

@@ -9,10 +9,7 @@ Run:  PYTHONPATH=src python benchmarks/serve_throughput.py \
           [--arch qwen2-72b] [--slots 1,4] [--requests 12]
 """
 import argparse
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 

@@ -1,0 +1,98 @@
+"""Search-strategy shoot-out: staged vs genetic vs exhaustive at equal budget.
+
+The paper's Step 4 spends a fixed measurement budget ``d`` (default 4); its
+companion papers (arXiv 2004.08548 / 2011.12431) search the same pattern
+space with a GA over loop/destination genomes.  This section runs every
+registered ``SearchStrategy`` on tdFIR and MRI-Q under the SAME budget and
+reports, per (app, strategy): patterns measured, whether any pattern was
+measured twice (must never happen — the MeasurementLedger dedups), the
+selected pattern, its measured median, and total compile seconds spent.
+
+With ``--json PATH`` the rows are also written as a BENCH_*.json document
+(``{"section": "strategies", "backend": ..., "rows": [...]}``) so CI can
+archive the perf trajectory.
+
+Run:  PYTHONPATH=src python -m benchmarks.strategies [--budget 4] [--json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.apps import mriq, tdfir
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.search import impl_key
+from repro.core.strategies import STRATEGY_NAMES
+
+APPS = (("tdfir", tdfir.make_program), ("mriq", mriq.make_program))
+
+
+def run(budget: int = 4, reps: int = 3, seed: int = 0) -> list[dict]:
+    rows = []
+    for app, make in APPS:
+        for strat in STRATEGY_NAMES:
+            prog = make()
+            cfg = PlannerConfig(max_measurements=budget, reps=reps,
+                                strategy=strat, seed=seed)
+            rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+            keys = [impl_key(m.impl) for m in rep.measurements]
+            rows.append({
+                "app": app,
+                "strategy": rep.strategy,
+                "budget": budget,
+                "n_measured": len(rep.measurements),
+                "unique_patterns": len(set(keys)) == len(keys),
+                "baseline_ms": rep.baseline.run_seconds * 1e3,
+                "best_ms": rep.best_seconds * 1e3,
+                "speedup": rep.speedup,
+                "best_pattern": dict(rep.best_pattern),
+                "compile_ms_total": sum(m.compile_seconds
+                                        for m in rep.measurements) * 1e3,
+            })
+    return rows
+
+
+def main(budget: int = 4, reps: int = 3, seed: int = 0,
+         json_path: str | None = None) -> list[dict]:
+    rows = run(budget=budget, reps=reps, seed=seed)
+    print(f"app,strategy,budget,measured,unique,baseline_ms,best_ms,"
+          f"speedup,pattern")
+    for r in rows:
+        pat = "+".join(f"{k}={v}" for k, v in sorted(r["best_pattern"].items())
+                       ) or "all-ref"
+        print(f"{r['app']},{r['strategy']},{r['budget']},{r['n_measured']},"
+              f"{r['unique_patterns']},{r['baseline_ms']:.2f},"
+              f"{r['best_ms']:.2f},{r['speedup']:.2f},{pat}")
+        assert r["unique_patterns"], \
+            f"{r['app']}/{r['strategy']}: a pattern was measured twice"
+    # GA vs staged at equal budget: the GA's seed population starts from the
+    # Step-3 efficiency ranking, so it should never select a slower pattern
+    # (5% tolerance absorbs run-to-run timing noise on a shared box)
+    by = {(r["app"], r["strategy"]): r for r in rows}
+    for app, _ in APPS:
+        ga, staged = by[(app, "genetic")], by[(app, "staged")]
+        verdict = "<=" if ga["best_ms"] <= staged["best_ms"] * 1.05 else ">"
+        print(f"# {app}: genetic best {ga['best_ms']:.2f} ms {verdict} "
+              f"staged best {staged['best_ms']:.2f} ms at d={staged['budget']}")
+    if json_path:
+        doc = {"section": "strategies",
+               "backend": jax.default_backend(),
+               "budget": budget,
+               "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=4, help="d, per strategy")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_*.json-style output here")
+    a = ap.parse_args()
+    main(budget=a.budget, reps=a.reps, seed=a.seed, json_path=a.json)

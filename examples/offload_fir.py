@@ -7,11 +7,9 @@ arithmetic intensity, pre-compile resource fractions, resource efficiency,
 the measured patterns, and the selected solution — plus the Pallas-kernel
 validation and the v5e roofline projection.
 
-Run:  PYTHONPATH=src python examples/offload_fir.py
+Run:  PYTHONPATH=src python examples/offload_fir.py [--strategy genetic]
 """
-import sys
-
-sys.path.insert(0, "src")
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -21,14 +19,22 @@ from repro.apps.tdfir import make_program
 from repro.configs.paper_apps import TDFIR_FULL
 from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.strategies import STRATEGY_NAMES
 from repro.kernels.fir import fir_filter_bank
 from repro.kernels.ref import fir_ref
 from repro.launch.constants import projected_tpu_seconds
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
+                help="Step-4 search strategy (part of the plan-cache key)")
+ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
+args = ap.parse_args()
+
 print("=== tdFIR automatic offload (paper app #1) ===")
 program = make_program()
-report = AutoOffloader(PlannerConfig(reps=5)).plan(program,
-                                                   cache=PlanCache.default())
+report = AutoOffloader(
+    PlannerConfig(reps=5, strategy=args.strategy, seed=args.seed)).plan(
+    program, cache=PlanCache.default())
 print(report.summary())
 
 print("\n--- deploy kernel validation (Pallas, interpret mode) ---")

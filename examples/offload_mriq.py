@@ -1,11 +1,9 @@
 """Paper reproduction, app #2: automatic offload of Parboil MRI-Q
 (paper §5, Fig. 4 row 2).  Same staged pipeline as examples/offload_fir.py.
 
-Run:  PYTHONPATH=src python examples/offload_mriq.py
+Run:  PYTHONPATH=src python examples/offload_mriq.py [--strategy genetic]
 """
-import sys
-
-sys.path.insert(0, "src")
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -15,14 +13,22 @@ from repro.apps.mriq import make_program
 from repro.configs.paper_apps import MRIQ_FULL
 from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.strategies import STRATEGY_NAMES
 from repro.kernels.mriq import mriq_compute_q
 from repro.kernels.ref import mriq_ref
 from repro.launch.constants import projected_tpu_seconds
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
+                help="Step-4 search strategy (part of the plan-cache key)")
+ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
+args = ap.parse_args()
+
 print("=== MRI-Q automatic offload (paper app #2) ===")
 program = make_program()
-report = AutoOffloader(PlannerConfig(reps=5)).plan(program,
-                                                   cache=PlanCache.default())
+report = AutoOffloader(
+    PlannerConfig(reps=5, strategy=args.strategy, seed=args.seed)).plan(
+    program, cache=PlanCache.default())
 print(report.summary())
 
 print("\n--- deploy kernel validation (Pallas, interpret mode) ---")

@@ -10,12 +10,10 @@ reuses the persistent plan cache.
 Run:  PYTHONPATH=src python examples/offload_transformer.py [--arch ...]
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.strategies import STRATEGY_NAMES
 from repro.models.offload_program import make_lm_program  # noqa: F401 (re-export)
 
 
@@ -24,10 +22,17 @@ def main() -> None:
     ap.add_argument("--arch", default="falcon-mamba-7b")
     ap.add_argument("--no-cache", action="store_true",
                     help="always re-measure instead of using the plan cache")
+    ap.add_argument("--strategy", default="staged",
+                    choices=list(STRATEGY_NAMES),
+                    help="Step-4 search strategy (part of the plan-cache key)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="strategy RNG seed (GA)")
     args = ap.parse_args()
     prog = make_lm_program(args.arch)
     cache = None if args.no_cache else PlanCache.default()
-    report = AutoOffloader(PlannerConfig(reps=3)).plan(prog, cache=cache)
+    report = AutoOffloader(PlannerConfig(reps=3, strategy=args.strategy,
+                                         seed=args.seed)).plan(prog,
+                                                               cache=cache)
     print(report.summary())
     print("\nDeploy mapping: selected measure-variants correspond to Pallas "
           "kernels on TPU (attn_core->flash_attention, ssm_scan->ssm_scan, "

@@ -4,11 +4,9 @@ Declare regions (the "loop statements"), give the planner your program, and
 it runs the staged search: AI filter -> cheap-lowering resource filter ->
 budgeted measured patterns -> best pattern.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--strategy genetic]
 """
-import sys
-
-sys.path.insert(0, "src")
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +15,7 @@ from repro.core.plan_cache import PlanCache
 from repro.core.planner import AutoOffloader, PlannerConfig
 from repro.core.program import OffloadableProgram, Region
 from repro.core.regions import Impl, dispatch, register_variant
+from repro.core.strategies import STRATEGY_NAMES
 
 
 # --- 1. write your compute regions with a loop-faithful ref and an offload
@@ -68,8 +67,15 @@ program = OffloadableProgram(
 )
 
 # --- 3. plan (cached: a second run is served without re-measuring) ----------
-report = AutoOffloader(PlannerConfig(reps=3)).plan(program,
-                                                   cache=PlanCache.default())
+ap = argparse.ArgumentParser()
+ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
+                help="Step-4 search strategy: staged (paper heuristic), "
+                     "genetic (GA over mixed genomes), exhaustive (oracle)")
+ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
+args = ap.parse_args()
+report = AutoOffloader(
+    PlannerConfig(reps=3, strategy=args.strategy, seed=args.seed)).plan(
+    program, cache=PlanCache.default())
 print(report.summary())
 if report.from_cache:
     print("(plan served from cache — delete .repro_plan_cache.json to re-measure)")

@@ -4,10 +4,7 @@ bucketed prefill, admission control, pluggable sampling, lifecycle stats.
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
 """
 import argparse
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 

@@ -8,9 +8,6 @@ import argparse
 import dataclasses
 import functools
 import logging
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 

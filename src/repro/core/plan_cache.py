@@ -13,7 +13,10 @@ to the selected offload pattern.  ``AutoOffloader.plan(..., cache=...)``
 returns a cached plan with ZERO new measurements when the key matches, and
 re-plans (then stores) when anything that could change the answer changes —
 the program's shapes, the variant registry, the backend the measurements
-would run on, or the planner budgets.
+would run on, the planner budgets, or the Step-4 search strategy (a
+GA-found plan and a staged-found plan are different searches; both can
+coexist in the file — the seed and GA knobs key only ``genetic`` plans,
+since they cannot change a staged/exhaustive trajectory).
 
 File format (version 1)::
 
@@ -27,7 +30,8 @@ File format (version 1)::
           "pattern": "fir_bank=offload",
           "speedup": 1.8,
           "baseline_seconds": 0.0123,
-          "best_seconds": 0.0068,
+          "best_seconds": 0.0068,        # the winner's own measured median
+          "strategy": "staged",          # the SearchStrategy that found it
           "jaxpr_loop_count": 7,
           "measured_patterns": ["all-ref", "fir_bank=offload", ...],
           "created_at": "2026-07-29T12:00:00+00:00"
@@ -69,6 +73,12 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     # different reps miss each other's plans for no reason
     cfg_fields = {k: v for k, v in dataclasses.asdict(config).items()
                   if k not in ("reps", "warmup")}
+    # likewise the RNG seed and GA knobs cannot influence a non-genetic
+    # search trajectory: keying a staged plan on ga_mutation would force a
+    # full re-measure for a knob the strategy never reads
+    if cfg_fields.get("strategy", "staged") != "genetic":
+        cfg_fields = {k: v for k, v in cfg_fields.items()
+                      if k != "seed" and not k.startswith("ga_")}
     payload = {
         "program": program.name,
         "backend": backend or jax.default_backend(),

@@ -12,15 +12,16 @@ DESIGN.md §2:
                                  rank (region, variant) pairs, keep the
                                  top-c regions (each with its variant
                                  ranking)
-  Step 4  measured search      — round 1: best variant per surviving region;
-                                 round 2: cross-region combinations of
-                                 round-1 winners, each region keeping its
-                                 winning variant (skipped if the summed
-                                 resource fraction exceeds the cap);
-                                 round 3: leftover budget on runner-up
-                                 variants; total measured patterns <= d
-                                 (baseline excluded, as in the paper where
-                                 all-CPU is the pre-existing reference)
+  Step 4  measured search      — a pluggable ``SearchStrategy``
+                                 (core/strategies.py) proposes patterns
+                                 ask–tell through a ``MeasurementLedger``;
+                                 total measured patterns <= d, no pattern
+                                 measured twice (baseline excluded, as in
+                                 the paper where all-CPU is the pre-existing
+                                 reference).  ``staged`` is the paper's
+                                 3-round heuristic; ``genetic`` the
+                                 companion papers' GA over mixed genomes;
+                                 ``exhaustive`` the tiny-space oracle.
   Step 5  select               — fastest measured pattern; the selected
                                  mapping is the measurement's own structured
                                  ``Impl`` (no string re-parsing)
@@ -39,17 +40,18 @@ Defaults a=5, c=3, d=4 match the paper's evaluation conditions (§5.1.2).
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 
 import jax
 
+from repro.core import search
 from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
 from repro.core.plan_cache import PlanCache, plan_cache_key, resolve_cache
 from repro.core.program import OffloadableProgram
 from repro.core.regions import Impl, offload_variants
 from repro.core.resources import ResourceEstimate, precompile
-from repro.core.search import Measurement, time_callable
+from repro.core.search import Measurement, MeasurementLedger
+from repro.core.strategies import SearchCandidate, SearchState, make_strategy
 
 
 @dataclass(frozen=True)
@@ -61,6 +63,15 @@ class PlannerConfig:
     unroll_b: int = 1           # kernel unroll knob (paper: 1)
     warmup: int = 1
     reps: int = 5
+    # ---- Step-4 search strategy (core/strategies.py) ----
+    strategy: str = "staged"    # staged | genetic | exhaustive
+    seed: int = 0               # strategy RNG seed (GA determinism)
+    ga_population: int = 6      # genomes per generation
+    ga_generations: int = 4     # generations (ledger hits don't spend d)
+    ga_crossover: float = 0.9   # uniform-crossover probability
+    ga_mutation: float = 0.15   # per-gene mutation probability
+    ga_tournament: int = 2      # tournament size
+    ga_elite: int = 1           # elites carried over (re-measured for free)
 
 
 def _efficiency(analysis: RegionAnalysis,
@@ -114,9 +125,12 @@ class PlanReport:
     measurements: list[Measurement] = field(default_factory=list)
     best_pattern: dict = field(default_factory=dict)
     speedup: float = 0.0
+    best_seconds: float = 0.0          # winning measurement's own median
     skipped_combinations: list[str] = field(default_factory=list)
     from_cache: bool = False
     cache_key: str = ""
+    strategy: str = "staged"           # which SearchStrategy produced this
+    search_trace: list[dict] = field(default_factory=list)  # rounds/generations
 
     def best_impl(self) -> Impl:
         """The selected pattern as a dispatchable Impl."""
@@ -126,6 +140,7 @@ class PlanReport:
         lines = [f"== offload plan: {self.program} =="
                  + ("  [served from plan cache]" if self.from_cache else "")]
         lines += [f"loops: source={self.source_loop_count} jaxpr={self.jaxpr_loop_count}",
+                  f"search strategy: {self.strategy}",
                   f"AI top-a: {self.ai_selected}",
                   f"efficiency top-c: {self.eff_selected}"]
         if self.eff_pairs:
@@ -140,10 +155,19 @@ class PlanReport:
                 f"eff={c.efficiency:10.1f}"
                 + (f" best_variant={c.best_variant}" if c.best_variant else ""))
         if self.baseline:
-            lines.append(f"baseline (all-ref): {self.baseline.run_seconds*1e3:.2f} ms")
+            lines.append(f"baseline (all-ref): {self.baseline.run_seconds*1e3:.2f} ms"
+                         f"  (compile {self.baseline.compile_seconds*1e3:.0f} ms)")
         for m in self.measurements:
             lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
+                         f"  (compile {m.compile_seconds*1e3:.0f} ms)"
                          + ("" if m.ok else f"  FAILED {m.error}"))
+        for t in self.search_trace:
+            # per-pattern timings are already listed above; the trace line
+            # adds the stage grouping and the proposal count (which includes
+            # free ledger hits, e.g. GA elites re-proposed across generations)
+            n = len(t.get("patterns", []))
+            lines.append(f"  {t.get('stage', '?')}: "
+                         f"{n} proposal{'s' if n != 1 else ''}")
         lines.append(f"best: {self.best_pattern}  speedup={self.speedup:.2f}x")
         return "\n".join(lines)
 
@@ -156,7 +180,8 @@ class AutoOffloader:
     def plan(self, program: OffloadableProgram,
              key: jax.Array | None = None,
              cache: "PlanCache | str | None" = None) -> PlanReport:
-        """Run the staged search, or serve the plan from ``cache``.
+        """Run the configured search strategy, or serve the plan from
+        ``cache``.
 
         ``cache`` may be a PlanCache, a path, or None (no caching).  A hit
         returns with zero new measurements; a miss runs the full pipeline
@@ -261,71 +286,46 @@ class AutoOffloader:
             elif c.variant_estimates:           # all failed/over-cap: show one
                 c.resources = next(iter(c.variant_estimates.values()))
 
-        # ---- Step 4: measured mixed-pattern search --------------------
-        report.baseline = time_callable(full_ref, sample, warmup=cfg.warmup,
-                                        reps=cfg.reps, pattern="all-ref",
-                                        impl=Impl())
-        budget = cfg.max_measurements
-        frac = {(p.region, p.variant): p.resources.resource_fraction
-                for p in eligible}
+        # ---- Step 4: measured pattern search (pluggable strategy) -----
+        report.baseline = search.time_callable(
+            full_ref, sample, warmup=cfg.warmup, reps=cfg.reps,
+            pattern="all-ref", impl=Impl())
 
         def measure(impl: Impl) -> Measurement:
             fn = program.build(impl)
-            m = time_callable(fn, sample, warmup=cfg.warmup, reps=cfg.reps,
-                              pattern=impl.describe(), impl=impl)
-            report.measurements.append(m)
-            return m
+            return search.time_callable(fn, sample, warmup=cfg.warmup,
+                                        reps=cfg.reps,
+                                        pattern=impl.describe(), impl=impl)
 
-        # round 1: each surviving region's best destination, singly
-        round1: list[tuple[str, str, Measurement]] = []
-        for region in eff_regions:
-            if budget <= 0:
-                break
-            top = variants_of[region][0]
-            m = measure(Impl({region: top.variant}))
-            round1.append((region, top.variant, m))
-            budget -= 1
-
-        # A failed baseline measures as inf, which would promote EVERY ok
-        # round-1 measurement to "winner" — combinations must only be built
-        # against a meaningful reference.
-        base_ok = report.baseline.ok
-        winners = [(r, v) for r, v, m in round1
-                   if m.ok and base_ok
-                   and m.run_seconds < report.baseline.run_seconds]
-        # round 2: mixed cross-region combinations of round-1 winners
-        # (largest combo first), resource-capped on the chosen variants
-        for size in range(len(winners), 1, -1):
-            if budget <= 0:
-                break
-            for combo in itertools.combinations(winners, size):
-                if budget <= 0:
-                    break
-                if sum(frac[rv] for rv in combo) > cfg.resource_cap:
-                    report.skipped_combinations.append(
-                        "+".join(f"{r}={v}" for r, v in combo))
-                    continue
-                measure(Impl(dict(combo)))
-                budget -= 1
-
-        # round 3: leftover budget tries runner-up destinations singly
-        tried = {(r, v) for r, v, _ in round1}
-        for p in ranked:
-            if budget <= 0:
-                break
-            if p.region not in eff_regions or (p.region, p.variant) in tried:
-                continue
-            tried.add((p.region, p.variant))
-            measure(Impl({p.region: p.variant}))
-            budget -= 1
+        ledger = MeasurementLedger(measure, budget=cfg.max_measurements)
+        # the all-ref baseline pre-exists (the paper's running CPU system):
+        # a strategy re-proposing it gets the measurement without spending d
+        ledger.prime(Impl(), report.baseline)
+        state = SearchState(
+            regions=eff_regions,
+            ranked=[SearchCandidate(p.region, p.variant,
+                                    p.resources.resource_fraction,
+                                    p.efficiency)
+                    for p in ranked if p.region in eff_regions],
+            resource_cap=cfg.resource_cap,
+            seed=cfg.seed,
+            baseline=report.baseline)
+        strategy = make_strategy(cfg)
+        strategy.run(state, ledger)
+        report.measurements = ledger.order       # budget-consuming, in order
+        report.strategy = strategy.name
+        report.search_trace = state.trace
+        report.skipped_combinations = state.skipped
 
         # ---- Step 5: select -------------------------------------------
+        base_ok = report.baseline.ok
         ok_measurements = [m for m in report.measurements if m.ok]
         best = min(ok_measurements, key=lambda m: m.run_seconds,
                    default=None)
         if best is not None and (not base_ok
                                  or best.run_seconds < report.baseline.run_seconds):
             report.best_pattern = best.mapping()
+            report.best_seconds = best.run_seconds
             # a failed baseline gives no meaningful reference: still select
             # the fastest working pattern, but never claim a speedup (and
             # _sound() keeps this search out of the plan cache)
@@ -333,6 +333,8 @@ class AutoOffloader:
                               if base_ok else 1.0)
         else:
             report.best_pattern = {}
+            report.best_seconds = (report.baseline.run_seconds
+                                   if base_ok else 0.0)
             report.speedup = 1.0
         return report
 
@@ -346,8 +348,10 @@ class AutoOffloader:
             jaxpr_loop_count=int(entry.get("jaxpr_loop_count", 0)),
             best_pattern=dict(entry.get("best_pattern", {})),
             speedup=float(entry.get("speedup", 1.0)),
+            best_seconds=float(entry.get("best_seconds", 0.0)),
             from_cache=True,
             cache_key=ckey,
+            strategy=str(entry.get("strategy", "staged")),
         )
         report.baseline = Measurement("all-ref", 0.0, baseline_s, [],
                                       impl={})
@@ -363,8 +367,11 @@ class AutoOffloader:
             "pattern": Impl(report.best_pattern).describe(),
             "speedup": report.speedup,
             "baseline_seconds": baseline_s,
-            "best_seconds": (baseline_s / report.speedup
-                             if report.speedup > 0 else baseline_s),
+            # the winning measurement's own median — NOT baseline/speedup,
+            # which drifts by division and is wrong when the failed-baseline
+            # path clamps speedup to 1.0
+            "best_seconds": report.best_seconds,
+            "strategy": report.strategy,
             "jaxpr_loop_count": report.jaxpr_loop_count,
             "measured_patterns": [m.pattern for m in report.measurements],
         }

@@ -1,0 +1,311 @@
+"""Pluggable Step-4 search strategies over the offload-pattern space.
+
+The source paper narrows loop candidates (AI filter -> resource filter)
+because each FPGA pattern costs hours to compile, then spends a fixed budget
+``d`` measuring patterns.  Its companion papers search the surviving space
+*evolutionarily*: arXiv 2004.08548 evolves loop on/off genomes with a GA,
+and arXiv 2011.12431 extends the genome to mixed ``{region -> destination}``
+mappings — exactly the ``Impl`` our planner carries.  This module makes that
+search a pluggable layer:
+
+* ``StagedSearch``     — the original 3-round heuristic (round 1: best
+  destination per surviving region, singly; round 2: cross-region
+  combinations of round-1 winners under the resource cap; round 3: leftover
+  budget on runner-up destinations).  Behavior-preserving extraction of the
+  planner's old hard-coded Step 4.
+* ``GeneticSearch``    — a population of ``Impl`` genomes, one gene per
+  surviving region over ``{ref} ∪ eligible variants``, seeded from the
+  Step-3 efficiency ranking.  Fitness is the measured ``run_seconds``;
+  genomes over the resource cap are repaired toward ``ref``; tournament
+  selection + uniform crossover + per-gene mutation.  Fully deterministic
+  from ``SearchState.seed`` (given deterministic measurements).
+* ``ExhaustiveSearch`` — the full genome space in deterministic order; the
+  parity oracle for tiny spaces.
+
+The interface is ask–tell, expressed as a Python generator: a strategy's
+``proposals(state, ledger)`` *asks* by yielding an ``Impl`` and is *told*
+the resulting ``Measurement`` as the value of the ``yield`` expression.
+``SearchStrategy.run`` drives the generator through a ``MeasurementLedger``,
+so a genome re-proposed within one run (a GA elite, a duplicate offspring)
+is served from the ledger and only ledger misses consume budget.  The
+strategy never sees the program or the clock — everything it may exploit is
+in the shared ``SearchState``.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+
+from repro.core.regions import Impl
+from repro.core.search import Measurement, MeasurementLedger
+
+STRATEGY_NAMES = ("staged", "genetic", "exhaustive")
+
+
+@dataclass(frozen=True)
+class SearchCandidate:
+    """One eligible (region, variant) destination with its Step-3 numbers."""
+    region: str
+    variant: str
+    resource_fraction: float
+    efficiency: float
+
+
+@dataclass
+class SearchState:
+    """Everything a strategy may consult, shared across all strategies.
+
+    ``regions`` are the Step-3 survivors in efficiency order; ``ranked`` the
+    eligible (region, variant) pairs in rank order (regions restricted to
+    the survivors).  The measurement budget lives ONLY on the ledger
+    (``ledger.budget`` is the live remaining count).  ``skipped`` and
+    ``trace`` are written by the strategy and surfaced on the PlanReport.
+    """
+    regions: list[str]
+    ranked: list[SearchCandidate]
+    resource_cap: float = 1.0
+    seed: int = 0
+    baseline: Measurement | None = None
+    skipped: list[str] = field(default_factory=list)
+    trace: list[dict] = field(default_factory=list)
+
+    def variants_of(self, region: str) -> list[SearchCandidate]:
+        """The region's eligible destinations, best-ranked first."""
+        return [c for c in self.ranked if c.region == region]
+
+    def fractions(self) -> dict[tuple[str, str], float]:
+        return {(c.region, c.variant): c.resource_fraction
+                for c in self.ranked}
+
+    def impl_fraction(self, impl) -> float:
+        """Summed resource fraction of a genome's non-ref genes — the single
+        definition of cap accounting all strategies share."""
+        frac = self.fractions()
+        return sum(frac.get((r, v), 0.0) for r, v in dict(impl).items()
+                   if v != "ref")
+
+    def begin_stage(self, stage: str) -> dict:
+        """Open a trace entry; callers fill ``patterns`` per measurement so
+        a budget exhaustion mid-stage still leaves an accurate trace."""
+        entry = {"stage": stage, "patterns": []}
+        self.trace.append(entry)
+        return entry
+
+
+class SearchStrategy:
+    """Ask–tell search driver.  Subclasses implement ``proposals``."""
+    name = "base"
+
+    def proposals(self, state: SearchState, ledger: MeasurementLedger):
+        """Generator protocol: ``yield impl`` asks for a measurement; the
+        ``yield`` expression evaluates to the Measurement (tell).  Strategies
+        may read ``ledger.budget``/``ledger.seen`` but never measure
+        directly."""
+        raise NotImplementedError
+
+    def run(self, state: SearchState, ledger: MeasurementLedger) -> None:
+        gen = self.proposals(state, ledger)
+        try:
+            impl = next(gen)
+            while True:
+                m = ledger.measure(impl)
+                if m is None:            # budget exhausted mid-proposal
+                    gen.close()
+                    return
+                impl = gen.send(m)
+        except StopIteration:
+            return
+
+
+# ---------------------------------------------------------------------------
+class StagedSearch(SearchStrategy):
+    """The paper's 3-round heuristic, extracted verbatim from the planner."""
+    name = "staged"
+
+    def proposals(self, state: SearchState, ledger: MeasurementLedger):
+        base = state.baseline
+        base_ok = base is not None and base.ok
+
+        # trace entries are appended up-front and filled per measurement, so
+        # a budget exhaustion mid-round still leaves an accurate trace
+        # round 1: each surviving region's best destination, singly
+        t1 = state.begin_stage("round 1 (best destination per region)")
+        round1: list[tuple[str, str, Measurement]] = []
+        for region in state.regions:
+            top = state.variants_of(region)[0]
+            impl = Impl({region: top.variant})
+            m = yield impl
+            t1["patterns"].append(impl.describe())
+            round1.append((region, top.variant, m))
+
+        # A failed baseline measures as inf, which would promote EVERY ok
+        # round-1 measurement to "winner" — combinations must only be built
+        # against a meaningful reference.
+        winners = [(r, v) for r, v, m in round1
+                   if m.ok and base_ok and m.run_seconds < base.run_seconds]
+
+        # round 2: mixed cross-region combinations of round-1 winners
+        # (largest combo first), resource-capped on the chosen variants
+        t2 = state.begin_stage("round 2 (winner combinations)")
+        for size in range(len(winners), 1, -1):
+            if ledger.exhausted():
+                break
+            for combo in itertools.combinations(winners, size):
+                if ledger.exhausted():
+                    break
+                impl = Impl(dict(combo))
+                if state.impl_fraction(impl) > state.resource_cap:
+                    state.skipped.append(
+                        "+".join(f"{r}={v}" for r, v in combo))
+                    continue
+                yield impl
+                t2["patterns"].append(impl.describe())
+
+        # round 3: leftover budget tries runner-up destinations singly
+        t3 = state.begin_stage("round 3 (runner-up destinations)")
+        tried = {(r, v) for r, v, _ in round1}
+        for c in state.ranked:
+            if ledger.exhausted():
+                break
+            if c.region not in state.regions or (c.region, c.variant) in tried:
+                continue
+            tried.add((c.region, c.variant))
+            impl = Impl({c.region: c.variant})
+            yield impl
+            t3["patterns"].append(impl.describe())
+
+
+# ---------------------------------------------------------------------------
+class GeneticSearch(SearchStrategy):
+    """GA over mixed {region -> destination} genomes (arXiv 2004.08548 /
+    2011.12431).  One gene per surviving region; allele space
+    ``{ref} ∪ eligible variants``.  Deterministic from ``state.seed``."""
+    name = "genetic"
+
+    def __init__(self, population: int = 6, generations: int = 4,
+                 crossover: float = 0.9, mutation: float = 0.15,
+                 tournament: int = 2, elite: int = 1):
+        self.population = max(population, 2)
+        self.generations = max(generations, 1)
+        self.crossover = crossover
+        self.mutation = mutation
+        self.tournament = max(tournament, 1)
+        self.elite = max(elite, 0)
+
+    def proposals(self, state: SearchState, ledger: MeasurementLedger):
+        regions = list(state.regions)
+        if not regions:
+            return
+        rng = random.Random(state.seed)
+        alleles = {r: ["ref"] + [c.variant for c in state.variants_of(r)]
+                   for r in regions}
+        frac = state.fractions()
+
+        def repair(g: dict) -> dict:
+            # over-cap genomes repaired toward ref: the heaviest gene is
+            # switched off until the genome fits (paper: combinations over
+            # the FPGA resource limit are never built)
+            g = dict(g)
+            while state.impl_fraction(g) > state.resource_cap:
+                on = [r for r in regions if g[r] != "ref"]
+                if not on:
+                    break
+                g[max(on, key=lambda r: frac.get((r, g[r]), 0.0))] = "ref"
+            return g
+
+        def to_impl(g: dict) -> Impl:
+            return Impl({r: v for r, v in g.items() if v != "ref"})
+
+        # seed population from the Step-3 efficiency ranking: the all-best
+        # genome first (the staged round-2 full combination), then the
+        # ranked singles (staged round 1/3), then random genomes
+        pop: list[dict] = [{r: (alleles[r][1] if len(alleles[r]) > 1
+                                else "ref") for r in regions}]
+        for c in state.ranked:
+            if len(pop) >= self.population:
+                break
+            g = {r: "ref" for r in regions}
+            g[c.region] = c.variant
+            pop.append(g)
+        while len(pop) < self.population:
+            pop.append({r: rng.choice(alleles[r]) for r in regions})
+        pop = [repair(g) for g in pop[:self.population]]
+
+        for generation in range(self.generations):
+            t = state.begin_stage(f"generation {generation}")
+            scored: list[tuple[float, dict]] = []
+            for g in pop:
+                impl = to_impl(g)
+                m = yield impl
+                t["patterns"].append(impl.describe())
+                scored.append((m.run_seconds if m.ok else float("inf"), g))
+            t["budget_left"] = ledger.budget
+            if generation + 1 >= self.generations or ledger.exhausted():
+                return
+            scored.sort(key=lambda t: t[0])
+
+            def tournament_pick() -> dict:
+                picks = [scored[rng.randrange(len(scored))]
+                         for _ in range(self.tournament)]
+                return min(picks, key=lambda t: t[0])[1]
+
+            nxt = [dict(g) for _, g in scored[:self.elite]]   # elites: ledger
+            while len(nxt) < self.population:                 # hits, free
+                p1, p2 = tournament_pick(), tournament_pick()
+                if rng.random() < self.crossover:             # uniform
+                    child = {r: (p1[r] if rng.random() < 0.5 else p2[r])
+                             for r in regions}
+                else:
+                    child = dict(p1)
+                for r in regions:                             # per-gene
+                    if rng.random() < self.mutation:
+                        child[r] = rng.choice(alleles[r])
+                nxt.append(repair(child))
+            pop = nxt
+
+
+# ---------------------------------------------------------------------------
+class ExhaustiveSearch(SearchStrategy):
+    """Every genome in the space, deterministic order — the parity oracle
+    for tiny spaces (and the paper's 'measure everything' degenerate case
+    when ``d`` covers the whole space)."""
+    name = "exhaustive"
+
+    def proposals(self, state: SearchState, ledger: MeasurementLedger):
+        regions = list(state.regions)
+        if not regions:
+            return
+        allele_lists = [["ref"] + [c.variant for c in state.variants_of(r)]
+                        for r in regions]
+        t = state.begin_stage("exhaustive enumeration")
+        for combo in itertools.product(*allele_lists):
+            if ledger.exhausted():
+                return       # don't walk (or log skips for) the unaffordable tail
+            impl = Impl({r: v for r, v in zip(regions, combo) if v != "ref"})
+            if not impl:
+                continue                  # all-ref = the baseline, free
+            if state.impl_fraction(impl) > state.resource_cap:
+                state.skipped.append(impl.describe())
+                continue
+            yield impl
+            t["patterns"].append(impl.describe())
+
+
+# ---------------------------------------------------------------------------
+def make_strategy(config) -> SearchStrategy:
+    """Strategy instance from a PlannerConfig (its ``strategy`` + GA knobs)."""
+    name = getattr(config, "strategy", "staged")
+    if name == "staged":
+        return StagedSearch()
+    if name == "genetic":
+        return GeneticSearch(population=config.ga_population,
+                             generations=config.ga_generations,
+                             crossover=config.ga_crossover,
+                             mutation=config.ga_mutation,
+                             tournament=config.ga_tournament,
+                             elite=config.ga_elite)
+    if name == "exhaustive":
+        return ExhaustiveSearch()
+    raise ValueError(f"unknown search strategy {name!r}; "
+                     f"choose from {STRATEGY_NAMES}")

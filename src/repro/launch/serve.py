@@ -24,20 +24,24 @@ from repro.configs import get_config
 from repro.core.plan_cache import (DEFAULT_CACHE_ENV, DEFAULT_CACHE_PATH,
                                    PlanCache)
 from repro.core.regions import Impl
+from repro.core.strategies import STRATEGY_NAMES
 from repro.models import factory as F
 from repro.serving.engine import ServeEngine
 from repro.serving.sampling import SamplingParams
 
 
-def planned_impl(arch: str, cache: PlanCache, reps: int = 2) -> Impl:
+def planned_impl(arch: str, cache: PlanCache, reps: int = 2,
+                 strategy: str = "staged", seed: int = 0) -> Impl:
     """Best cached/measured offload pattern for the arch's block regions,
     merged over the architectural defaults."""
     from repro.core.planner import AutoOffloader, PlannerConfig
     from repro.models.offload_program import make_lm_program
 
     prog = make_lm_program(arch)
-    report = AutoOffloader(PlannerConfig(reps=reps)).plan(prog, cache=cache)
-    src = "plan cache" if report.from_cache else "measured search"
+    report = AutoOffloader(PlannerConfig(reps=reps, strategy=strategy,
+                                         seed=seed)).plan(prog, cache=cache)
+    src = ("plan cache" if report.from_cache
+           else f"measured search [{report.strategy}]")
     print(f"auto-offload [{src}]: {report.best_pattern or 'all-ref'} "
           f"(speedup {report.speedup:.2f}x)")
     return Impl(report.best_pattern)
@@ -60,6 +64,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--auto-offload", action="store_true",
                     help="plan (or reuse the cached) offload pattern first")
+    ap.add_argument("--offload-strategy", default="staged",
+                    choices=list(STRATEGY_NAMES),
+                    help="Step-4 search strategy for --auto-offload "
+                         "(staged = paper heuristic, genetic = GA over "
+                         "mixed genomes, exhaustive = tiny-space oracle); "
+                         "part of the plan-cache key")
+    ap.add_argument("--offload-seed", type=int, default=0,
+                    help="strategy RNG seed for --auto-offload; kept "
+                         "separate from --seed (sampling) so varying the "
+                         "sampling seed never re-keys the plan cache")
     ap.add_argument("--plan-cache",
                     default=os.environ.get(DEFAULT_CACHE_ENV,
                                            DEFAULT_CACHE_PATH),
@@ -72,7 +86,9 @@ def main() -> None:
         cfg = cfg.reduced()
     impl = None
     if args.auto_offload:
-        impl = planned_impl(args.arch, PlanCache(args.plan_cache))
+        impl = planned_impl(args.arch, PlanCache(args.plan_cache),
+                            strategy=args.offload_strategy,
+                            seed=args.offload_seed)
     key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
     ctx = args.prompt_len + args.new_tokens + cfg.n_front

@@ -1,0 +1,422 @@
+"""Pluggable Step-4 search-strategy layer: staged extraction parity (golden),
+GA determinism, exhaustive oracle, measurement-ledger dedup, and the
+strategy's flow into the plan cache."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import search
+from repro.core.plan_cache import PlanCache, plan_cache_key
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, register_variant, variants
+from repro.core.search import Measurement, MeasurementLedger, impl_key
+from repro.core.strategies import (STRATEGY_NAMES, ExhaustiveSearch,
+                                   GeneticSearch, StagedSearch,
+                                   SearchCandidate, SearchState,
+                                   make_strategy)
+
+_counter = [0]
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 400, body, x)
+
+
+def _toy_program(n_variants_a: int = 1):
+    """Two-region toy: region a with ``n_variants_a`` non-ref destinations,
+    region b with one.  Refs are slow loops so offloads win decisively."""
+    tag = f"strat_{_counter[0]}"
+    _counter[0] += 1
+    a, b = f"{tag}_a", f"{tag}_b"
+    register_variant(a, "ref")(_slow_ref)
+    register_variant(a, "offload")(lambda x: x * 1.0000001)
+    if n_variants_a > 1:
+        register_variant(a, "fast")(lambda x: x + 1e-7)
+    register_variant(b, "ref")(_slow_ref)
+    register_variant(b, "offload")(lambda x: x - 1e-7)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    regions = [Region(a, variants(a)["ref"], abstract),
+               Region(b, variants(b)["ref"], abstract)]
+    prog = OffloadableProgram(
+        name=f"strat_toy_{tag}", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=2)
+    return prog, a, b
+
+
+def _fake_time_callable(monkeypatch):
+    """Deterministic measurement stand-in: run_seconds is a pure function of
+    the pattern string, so search trajectories are reproducible bit-for-bit
+    (GA determinism must not depend on wall-clock noise)."""
+    calls = []
+
+    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None):
+        calls.append(pattern)
+        if pattern == "all-ref":
+            secs = 1.0
+        else:
+            secs = 0.1 + (sum(ord(c) for c in pattern) % 97) / 1000.0
+        return Measurement(pattern, 0.01, secs, [secs] * max(reps, 1),
+                           impl=dict(impl) if impl is not None else None)
+
+    monkeypatch.setattr(search, "time_callable", fake)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# MeasurementLedger — dedup and budget accounting
+# ---------------------------------------------------------------------------
+def test_ledger_dedup_measures_once_and_decrements_once():
+    n_calls = [0]
+
+    def measure(impl):
+        n_calls[0] += 1
+        return Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                           impl=dict(impl))
+
+    ledger = MeasurementLedger(measure, budget=3)
+    g = Impl({"r1": "offload"})
+    m1 = ledger.measure(g)
+    m2 = ledger.measure(g)                    # re-proposed: ledger hit
+    assert m1 is m2
+    assert n_calls[0] == 1                    # measured once
+    assert ledger.budget == 2                 # budget decremented once
+    assert ledger.hits == 1 and ledger.misses == 1
+    assert [m.pattern for m in ledger.order] == ["r1=offload"]
+
+
+def test_ledger_equivalent_impls_share_an_entry():
+    ledger = MeasurementLedger(
+        lambda impl: Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                                 impl=dict(impl)), budget=5)
+    ledger.measure(Impl({"a": "offload", "b": "ref"}))
+    ledger.measure(Impl({"a": "offload"}))    # same program: explicit ref gene
+    assert ledger.misses == 1 and ledger.hits == 1
+
+
+def test_ledger_primed_baseline_is_free():
+    ledger = MeasurementLedger(lambda impl: pytest.fail("must not measure"),
+                               budget=1)
+    base = Measurement("all-ref", 0.0, 1.0, [1.0], impl={})
+    ledger.prime(Impl(), base)
+    assert ledger.measure(Impl()) is base     # hit, no budget spent
+    assert ledger.budget == 1 and ledger.order == []
+
+
+def test_ledger_exhaustion_returns_none():
+    ledger = MeasurementLedger(
+        lambda impl: Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                                 impl=dict(impl)), budget=1)
+    assert ledger.measure(Impl({"a": "offload"})) is not None
+    assert ledger.exhausted()
+    assert ledger.measure(Impl({"b": "offload"})) is None
+    # but an already-measured pattern is still served
+    assert ledger.measure(Impl({"a": "offload"})) is not None
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: strategy="staged" reproduces the pre-refactor Step 4
+# ---------------------------------------------------------------------------
+def _old_staged_sequence(rep, cfg):
+    """The planner's pre-refactor hard-coded 3-round Step 4, replayed from
+    the report's own Step-3 data and measurement outcomes.  This is the
+    golden oracle: the extracted StagedSearch must propose the exact same
+    pattern sequence."""
+    variants_of = {}
+    for r, v in rep.eff_pairs:
+        variants_of.setdefault(r, []).append(v)
+    frac = {}
+    for c in rep.candidates:
+        for v, est in c.variant_estimates.items():
+            frac[(c.region, v)] = est.resource_fraction
+    lookup = {m.pattern: m for m in rep.measurements}
+    budget = cfg.max_measurements
+    seq = []
+
+    round1 = []
+    for region in rep.eff_selected:
+        if budget <= 0:
+            break
+        top = variants_of[region][0]
+        impl = Impl({region: top})
+        seq.append(impl.describe())
+        budget -= 1
+        round1.append((region, top, lookup[impl.describe()]))
+    base_ok = rep.baseline.ok
+    winners = [(r, v) for r, v, m in round1
+               if m.ok and base_ok and m.run_seconds < rep.baseline.run_seconds]
+    for size in range(len(winners), 1, -1):
+        if budget <= 0:
+            break
+        for combo in itertools.combinations(winners, size):
+            if budget <= 0:
+                break
+            if sum(frac[rv] for rv in combo) > cfg.resource_cap:
+                continue
+            seq.append(Impl(dict(combo)).describe())
+            budget -= 1
+    tried = {(r, v) for r, v, _ in round1}
+    for r, v in rep.eff_pairs:
+        if budget <= 0:
+            break
+        if (r, v) in tried:
+            continue
+        tried.add((r, v))
+        seq.append(Impl({r: v}).describe())
+        budget -= 1
+    return seq
+
+
+@pytest.mark.parametrize("make_name", ["tdfir", "mriq"])
+def test_staged_golden_sequence_on_paper_apps(make_name):
+    """Acceptance: with strategy='staged' the planner measures the same
+    pattern sequence (and selects the same way) as before the refactor."""
+    from repro.apps import mriq, tdfir
+    make = {"tdfir": tdfir.make_program, "mriq": mriq.make_program}[make_name]
+    cfg = PlannerConfig(reps=1, warmup=0, strategy="staged")
+    rep = AutoOffloader(cfg).plan(make(), jax.random.PRNGKey(0))
+    assert rep.strategy == "staged"
+    measured = [m.pattern for m in rep.measurements]
+    assert measured == _old_staged_sequence(rep, cfg)
+    # no Impl measured twice in a single plan run
+    keys = [impl_key(m.impl) for m in rep.measurements]
+    assert len(keys) == len(set(keys))
+    # pre-refactor selection rule: fastest ok measurement beating baseline
+    ok = [m for m in rep.measurements if m.ok]
+    best = min(ok, key=lambda m: m.run_seconds, default=None)
+    if best is not None and best.run_seconds < rep.baseline.run_seconds:
+        assert rep.best_pattern == best.mapping()
+        assert rep.best_seconds == best.run_seconds
+    else:
+        assert rep.best_pattern == {}
+
+
+def test_staged_matches_old_sequence_on_toy(monkeypatch):
+    _fake_time_callable(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=2)
+    cfg = PlannerConfig(max_measurements=6, reps=1, warmup=0)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    assert [m.pattern for m in rep.measurements] == _old_staged_sequence(rep, cfg)
+    assert rep.search_trace and rep.search_trace[0]["stage"].startswith("round 1")
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive oracle and staged parity
+# ---------------------------------------------------------------------------
+def test_staged_and_exhaustive_agree_on_winner():
+    """Acceptance: on a 2-region toy with ample budget, the staged heuristic
+    finds the same winner as full enumeration (the parity oracle)."""
+    prog, a, b = _toy_program(n_variants_a=1)
+    reports = {}
+    for strat in ("staged", "exhaustive"):
+        cfg = PlannerConfig(max_measurements=8, reps=3, warmup=0,
+                            strategy=strat)
+        reports[strat] = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    # both refs are slow loops: offloading BOTH regions wins outright under
+    # either strategy
+    assert reports["staged"].best_pattern == {a: "offload", b: "offload"}
+    assert reports["exhaustive"].best_pattern == reports["staged"].best_pattern
+    assert reports["exhaustive"].strategy == "exhaustive"
+    # exhaustive measured the whole non-ref space: {a}, {b}, {a,b}
+    assert len(reports["exhaustive"].measurements) == 3
+
+
+def test_exhaustive_respects_resource_cap(monkeypatch):
+    from repro.core import resources as RES
+
+    _fake_time_callable(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=1)
+    RES.register_vmem_estimator(a, "offload")(lambda *ar: 0.6 * RES.VMEM_BUDGET)
+    RES.register_vmem_estimator(b, "offload")(lambda *ar: 0.6 * RES.VMEM_BUDGET)
+    cfg = PlannerConfig(max_measurements=8, reps=1, warmup=0,
+                        strategy="exhaustive")
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    mapped = [m.mapping() for m in rep.measurements]
+    assert {a: "offload"} in mapped and {b: "offload"} in mapped
+    assert {a: "offload", b: "offload"} not in mapped      # 1.2 > cap
+    assert f"{a}=offload+{b}=offload" in rep.skipped_combinations
+
+
+# ---------------------------------------------------------------------------
+# Genetic search
+# ---------------------------------------------------------------------------
+def test_ga_seed_determinism(monkeypatch):
+    """Acceptance: the same config seed yields the identical measured-pattern
+    sequence (measurements made deterministic so only the RNG matters)."""
+    seqs = []
+    for _ in range(2):
+        _fake_time_callable(monkeypatch)
+        prog, a, b = _toy_program(n_variants_a=2)
+        cfg = PlannerConfig(max_measurements=10, reps=1, warmup=0,
+                            strategy="genetic", seed=123,
+                            ga_population=4, ga_generations=3)
+        rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+        # normalize region names (fresh registry names per program)
+        seqs.append([m.pattern.replace(a, "A").replace(b, "B")
+                     for m in rep.measurements])
+        assert rep.strategy == "genetic"
+    assert seqs[0] == seqs[1]
+
+
+def test_ga_never_measures_a_genome_twice(monkeypatch):
+    calls = _fake_time_callable(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=2)
+    cfg = PlannerConfig(max_measurements=12, reps=1, warmup=0,
+                        strategy="genetic", seed=7,
+                        ga_population=5, ga_generations=4, ga_elite=2)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    keys = [impl_key(m.impl) for m in rep.measurements]
+    assert len(keys) == len(set(keys))
+    # elites survive generations, so re-proposals happened — and every
+    # pattern hit the measurement path at most once (plus the baseline)
+    non_baseline = [p for p in calls if p != "all-ref"]
+    assert len(non_baseline) == len(set(non_baseline))
+    assert len(rep.measurements) <= cfg.max_measurements
+    # generations were traced with their budget watermark
+    assert any(t["stage"].startswith("generation") for t in rep.search_trace)
+
+
+def test_ga_repairs_overweight_genomes(monkeypatch):
+    from repro.core import resources as RES
+
+    _fake_time_callable(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=1)
+    RES.register_vmem_estimator(a, "offload")(lambda *ar: 0.7 * RES.VMEM_BUDGET)
+    RES.register_vmem_estimator(b, "offload")(lambda *ar: 0.7 * RES.VMEM_BUDGET)
+    cfg = PlannerConfig(max_measurements=10, reps=1, warmup=0,
+                        strategy="genetic", seed=3,
+                        ga_population=6, ga_generations=3)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    # no measured genome exceeds the cap: {a,b} together (1.4) is repaired
+    for m in rep.measurements:
+        assert len(m.mapping()) <= 1
+
+
+def test_ga_finds_at_least_staged_winner_on_toy():
+    """Equal budget, real measurements: the GA's seed population embeds the
+    Step-3 ranking (all-best combo + ranked singles), so its selection is
+    never slower than staged's on the toy."""
+    prog, a, b = _toy_program(n_variants_a=1)
+    best = {}
+    for strat in ("staged", "genetic"):
+        cfg = PlannerConfig(max_measurements=4, reps=3, warmup=0,
+                            strategy=strat, seed=0)
+        rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+        best[strat] = rep
+    # both must discover the dominant both-regions-offloaded pattern
+    assert best["genetic"].best_pattern == {a: "offload", b: "offload"}
+    assert best["staged"].best_pattern == {a: "offload", b: "offload"}
+
+
+# ---------------------------------------------------------------------------
+# Strategy plumbing
+# ---------------------------------------------------------------------------
+def test_make_strategy_dispatch():
+    assert isinstance(make_strategy(PlannerConfig()), StagedSearch)
+    assert isinstance(make_strategy(PlannerConfig(strategy="genetic")),
+                      GeneticSearch)
+    assert isinstance(make_strategy(PlannerConfig(strategy="exhaustive")),
+                      ExhaustiveSearch)
+    with pytest.raises(ValueError):
+        make_strategy(PlannerConfig(strategy="anneal"))
+    assert set(STRATEGY_NAMES) == {"staged", "genetic", "exhaustive"}
+
+
+def test_strategy_never_exceeds_budget_mid_generator():
+    """run() must stop a strategy the moment the ledger refuses a proposal."""
+    state = SearchState(
+        regions=["r1", "r2"],
+        ranked=[SearchCandidate("r1", "offload", 0.1, 10.0),
+                SearchCandidate("r2", "offload", 0.1, 5.0)],
+        baseline=Measurement("all-ref", 0.0, 1.0, [1.0], impl={}))
+    ledger = MeasurementLedger(
+        lambda impl: Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                                 impl=dict(impl)), budget=1)
+    ExhaustiveSearch().run(state, ledger)
+    assert len(ledger.order) == 1
+
+
+def test_trace_survives_mid_stage_exhaustion(monkeypatch):
+    """Regression: a budget exhausted mid-round used to drop the whole
+    stage's trace entry even though its measurements were recorded."""
+    _fake_time_callable(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=1)
+    cfg = PlannerConfig(max_measurements=1, reps=1, warmup=0)   # dies in r1
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    assert len(rep.measurements) == 1
+    assert rep.search_trace[0]["stage"].startswith("round 1")
+    assert rep.search_trace[0]["patterns"] == [rep.measurements[0].pattern]
+
+
+def test_cache_key_sensitive_to_strategy_and_knobs():
+    prog, _, _ = _toy_program(n_variants_a=1)
+    base = plan_cache_key(prog, PlannerConfig())
+    assert plan_cache_key(prog, PlannerConfig(strategy="genetic")) != base
+    assert plan_cache_key(prog, PlannerConfig(strategy="exhaustive")) != base
+    # seed and GA knobs key GENETIC plans (they steer the trajectory) ...
+    assert plan_cache_key(prog, PlannerConfig(strategy="genetic", seed=1)) != \
+        plan_cache_key(prog, PlannerConfig(strategy="genetic"))
+    assert plan_cache_key(
+        prog, PlannerConfig(strategy="genetic", ga_mutation=0.5)) != \
+        plan_cache_key(prog, PlannerConfig(strategy="genetic"))
+    # ... but never a staged/exhaustive plan, which ignores them
+    assert plan_cache_key(prog, PlannerConfig(seed=1)) == base
+    assert plan_cache_key(prog, PlannerConfig(ga_mutation=0.5)) == base
+    # and stable when nothing changed
+    assert plan_cache_key(prog, PlannerConfig()) == base
+
+
+def test_cache_entry_records_strategy_and_true_best_seconds(tmp_path):
+    """Satellite: best_seconds is the winner's own median (not
+    baseline/speedup), and the producing strategy is recorded."""
+    prog, a, b = _toy_program(n_variants_a=1)
+    cache = PlanCache(tmp_path / "plans.json")
+    cfg = PlannerConfig(max_measurements=6, reps=3, warmup=0,
+                        strategy="exhaustive")
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0), cache=cache)
+    winner = min((m for m in rep.measurements if m.ok),
+                 key=lambda m: m.run_seconds)
+    assert rep.best_seconds == winner.run_seconds
+    entry = json.loads((tmp_path / "plans.json").read_text())[
+        "entries"][rep.cache_key]
+    assert entry["best_seconds"] == pytest.approx(winner.run_seconds)
+    assert entry["strategy"] == "exhaustive"
+    # the cached report carries the provenance back out
+    rep2 = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert rep2.from_cache and rep2.strategy == "exhaustive"
+    assert rep2.best_seconds == pytest.approx(winner.run_seconds)
+
+
+# ---------------------------------------------------------------------------
+# AOT compile timing (satellite)
+# ---------------------------------------------------------------------------
+def test_time_callable_separates_compile_from_first_run():
+    m = search.time_callable(lambda x: (x @ x).sum(),
+                             (jnp.ones((64, 64), jnp.float32),),
+                             warmup=0, reps=2, pattern="p", impl={})
+    assert m.ok
+    assert m.compile_seconds > 0.0            # AOT lower+compile, measured
+    assert m.first_run_seconds > 0.0          # first execution, separate
+    assert len(m.runs) == 2
+
+
+def test_summary_prints_compile_seconds():
+    prog, _, _ = _toy_program(n_variants_a=1)
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0)).plan(
+        prog, jax.random.PRNGKey(0))
+    text = rep.summary()
+    assert "compile" in text
+    assert "search strategy: staged" in text
