@@ -1,0 +1,142 @@
+"""Perf-trajectory trend view over the CI ``BENCH_*.json`` artifacts.
+
+CI uploads ``BENCH_conditions.json`` / ``BENCH_strategies.json`` per commit
+(ROADMAP: "populate the perf trajectory").  This tool compares the current
+artifacts against a previous run's and prints per-section, per-row deltas:
+
+    PYTHONPATH=src python -m benchmarks.trend --baseline prev/ [--current .]
+
+Rows are matched by their identity columns (``app`` for conditions,
+``app``+``strategy`` for strategies).  Gated metrics:
+
+* ``best_ms``  (lower is better) — the selected pattern's measured median,
+* ``speedup``  (higher is better) — vs the same run's own baseline.
+
+A gated metric that regresses by more than ``--threshold`` (default 20%,
+chosen for shared-runner timing noise) fails the run with a non-zero exit.
+Everything else (baseline_ms, n_measured, compile totals) is printed for
+the record but never gates.  With no baseline artifacts the tool prints a
+notice and exits 0 — the first run of a new section has nothing to compare.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SECTION_KEYS = {
+    "strategies": ("app", "strategy"),
+    "conditions": ("app",),
+}
+# metric -> direction: +1 higher is better, -1 lower is better, 0 report-only
+METRICS = {
+    "best_ms": -1,
+    "speedup": +1,
+    "baseline_ms": 0,
+    "n_measured": 0,
+    "n_reused": 0,
+    "measured": 0,
+    "compile_ms_total": 0,
+}
+
+
+def load_docs(path: str) -> dict[str, dict]:
+    """``BENCH_*.json`` documents in a directory (or a single file),
+    keyed by section."""
+    files = ([path] if os.path.isfile(path)
+             else sorted(glob.glob(os.path.join(path, "BENCH_*.json"))))
+    docs = {}
+    for f in files:
+        try:
+            with open(f) as fh:
+                doc = json.load(fh)
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"# skipping unreadable {f}: {e}")
+            continue
+        section = doc.get("section") or os.path.basename(f)[6:-5]
+        docs[section] = doc
+    return docs
+
+
+def row_key(section: str, row: dict) -> tuple:
+    keys = SECTION_KEYS.get(section)
+    if keys is None:                      # unknown section: best effort
+        keys = tuple(k for k in ("app", "strategy", "name") if k in row)
+    return tuple(str(row.get(k)) for k in keys)
+
+
+def compare(baseline: dict[str, dict], current: dict[str, dict],
+            threshold: float) -> list[str]:
+    """Print deltas; return the list of regression descriptions."""
+    regressions: list[str] = []
+    for section, cur_doc in sorted(current.items()):
+        base_doc = baseline.get(section)
+        if base_doc is None:
+            print(f"== {section}: no baseline — {len(cur_doc.get('rows', []))} "
+                  f"new rows, nothing to compare ==")
+            continue
+        print(f"== {section}: deltas vs baseline ==")
+        base_rows = {row_key(section, r): r for r in base_doc.get("rows", [])}
+        for row in cur_doc.get("rows", []):
+            key = row_key(section, row)
+            old = base_rows.get(key)
+            label = "/".join(key)
+            if old is None:
+                print(f"  {label}: new row")
+                continue
+            parts = []
+            for metric, direction in METRICS.items():
+                if metric not in row or metric not in old:
+                    continue
+                a, b = float(old[metric]), float(row[metric])
+                if a == 0:
+                    continue
+                delta = (b - a) / abs(a)
+                parts.append(f"{metric} {a:.2f}->{b:.2f} ({delta:+.1%})")
+                worse = (direction < 0 and delta > threshold) or \
+                        (direction > 0 and delta < -threshold)
+                if worse:
+                    regressions.append(
+                        f"{section}/{label}: {metric} regressed "
+                        f"{a:.2f} -> {b:.2f} ({delta:+.1%}, "
+                        f"threshold {threshold:.0%})")
+            print(f"  {label}: " + ("; ".join(parts) if parts else "no shared metrics"))
+    return regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="bench-baseline",
+                    help="directory (or file) with the previous run's "
+                         "BENCH_*.json artifacts")
+    ap.add_argument("--current", default=".",
+                    help="directory (or file) with this run's artifacts")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="gated-metric regression tolerance (fraction)")
+    args = ap.parse_args(argv)
+
+    current = load_docs(args.current)
+    if not current:
+        print(f"# no BENCH_*.json artifacts under {args.current!r}; "
+              f"run `python -m benchmarks.run --json` first")
+        return 1
+    baseline = load_docs(args.baseline) if os.path.exists(args.baseline) else {}
+    if not baseline:
+        print(f"# no baseline artifacts under {args.baseline!r} — "
+              f"first run of the trajectory, nothing to gate")
+        return 0
+    regressions = compare(baseline, current, args.threshold)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) over "
+              f"{args.threshold:.0%} threshold:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print("\n# no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

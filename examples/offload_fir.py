@@ -7,7 +7,7 @@ arithmetic intensity, pre-compile resource fractions, resource efficiency,
 the measured patterns, and the selected solution — plus the Pallas-kernel
 validation and the v5e roofline projection.
 
-Run:  PYTHONPATH=src python examples/offload_fir.py [--strategy genetic]
+Run:  PYTHONPATH=src python examples/offload_fir.py [--strategy surrogate]
 """
 import argparse
 
@@ -26,7 +26,9 @@ from repro.launch.constants import projected_tpu_seconds
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
-                help="Step-4 search strategy (part of the plan-cache key)")
+                help="Step-4 search strategy (part of the plan-cache key); "
+                     "surrogate = roofline-predicted fitness, auto = pick "
+                     "by space size — see docs/search-strategies.md")
 ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
 args = ap.parse_args()
 

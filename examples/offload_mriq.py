@@ -1,7 +1,7 @@
 """Paper reproduction, app #2: automatic offload of Parboil MRI-Q
 (paper §5, Fig. 4 row 2).  Same staged pipeline as examples/offload_fir.py.
 
-Run:  PYTHONPATH=src python examples/offload_mriq.py [--strategy genetic]
+Run:  PYTHONPATH=src python examples/offload_mriq.py [--strategy surrogate]
 """
 import argparse
 
@@ -20,7 +20,9 @@ from repro.launch.constants import projected_tpu_seconds
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
-                help="Step-4 search strategy (part of the plan-cache key)")
+                help="Step-4 search strategy (part of the plan-cache key); "
+                     "surrogate = roofline-predicted fitness, auto = pick "
+                     "by space size — see docs/search-strategies.md")
 ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
 args = ap.parse_args()
 

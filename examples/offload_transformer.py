@@ -24,7 +24,10 @@ def main() -> None:
                     help="always re-measure instead of using the plan cache")
     ap.add_argument("--strategy", default="staged",
                     choices=list(STRATEGY_NAMES),
-                    help="Step-4 search strategy (part of the plan-cache key)")
+                    help="Step-4 search strategy (part of the plan-cache "
+                         "key); surrogate = roofline-predicted fitness "
+                         "(recommended for the large LM-block space), auto "
+                         "= pick by space size")
     ap.add_argument("--seed", type=int, default=0,
                     help="strategy RNG seed (GA)")
     args = ap.parse_args()

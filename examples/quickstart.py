@@ -4,7 +4,7 @@ Declare regions (the "loop statements"), give the planner your program, and
 it runs the staged search: AI filter -> cheap-lowering resource filter ->
 budgeted measured patterns -> best pattern.
 
-Run:  PYTHONPATH=src python examples/quickstart.py [--strategy genetic]
+Run:  PYTHONPATH=src python examples/quickstart.py [--strategy surrogate]
 """
 import argparse
 
@@ -70,7 +70,9 @@ program = OffloadableProgram(
 ap = argparse.ArgumentParser()
 ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
                 help="Step-4 search strategy: staged (paper heuristic), "
-                     "genetic (GA over mixed genomes), exhaustive (oracle)")
+                     "genetic (GA over mixed genomes), surrogate "
+                     "(roofline-predicted fitness, fewer real measurements), "
+                     "exhaustive (oracle), auto (pick by space size)")
 ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
 args = ap.parse_args()
 report = AutoOffloader(

@@ -1,0 +1,177 @@
+"""Roofline surrogate for the Step-4 measured search — predicted fitness.
+
+The paper's verification environment (Step 4) is the expensive stage: every
+candidate offload pattern is compiled (~3 h per FPGA pattern) and run on the
+app's sample benchmark, which is why the budget ``d`` exists and why the
+companion GA proposals (arXiv 2004.08548 / 2011.12431) keep their
+populations tiny.  But Step 3 has *already* lowered every (region, variant)
+pair and recorded the quantities a roofline model needs — flops,
+transcendental counts, boundary bytes, layout alignment, VMEM fraction.
+This module turns those per-gene estimates into a **predicted seconds for
+any composite ``Impl`` genome**, so a search strategy can score a whole
+population for free and spend real measurements only where the model says
+it matters (``GeneticSearch(surrogate=True)``, strategy name
+``"surrogate"``).
+
+Model
+-----
+A genome's predicted time is additive over its genes around the all-ref
+base::
+
+    predict(impl) = base_seconds + sum_{(r, v) in impl, v != ref} delta[r, v]
+
+where ``delta[r, v] = accel_time(r, v) - host_time(r)`` starts from a
+two-sided roofline:
+
+* ``accel_time`` — ``max(flops / PEAK_FLOPS, bytes / HBM_BW)`` plus a
+  transcendental-unit term, divided by the Step-2 alignment score
+  (misaligned loops feed the MXU/VPU badly, the paper's FPGA-clock caveat),
+  plus a fixed launch overhead so near-empty regions never predict ~0.
+* ``host_time``  — ``flops / HOST_FLOPS + bytes / HOST_BW`` (a sequential,
+  loop-faithful host does not overlap compute with memory).
+
+Absolute constants only seed the model; **online calibration** replaces
+them: every real measurement the search makes (including cross-run ledger
+hits primed from the plan cache) is fed back via :meth:`CostModel.observe`.
+The update is a Kaczmarz projection on the linear gene system — the
+residual is split equally across the genome's genes — so a single-gene
+observation pins that gene's delta exactly, and on a consistent (additive)
+workload the prediction error is non-increasing as observations accumulate.
+``history`` records (pattern, predicted, measured) for every observation;
+``PlanReport.search_trace`` surfaces the per-generation view.
+
+The model is deliberately deterministic: no RNG, no clock — identical
+inputs give identical predictions, so surrogate searches stay reproducible
+from ``PlannerConfig.seed``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.intensity import TRANSCENDENTAL_WEIGHT
+
+# Accelerator-side seeds (TPU v5e class) — numerically the same figures as
+# repro/launch/constants.py, restated here rather than imported: core must
+# not depend on launch (launch imports core throughout, and a future
+# core-import in that module would close a circular import), and only the
+# host-vs-accelerator ratio matters before calibration replaces the scale.
+ACCEL_FLOPS = 197e12            # peak bf16 flop/s per chip
+ACCEL_BW = 819e9                # HBM bytes/s per chip
+ACCEL_TRANSCENDENTAL_RATE = 1e12  # VPU transcendental retire rate, elem/s
+
+# Host-side seeds (sequential loop-faithful ref code).  Only the
+# host-vs-accelerator *ratio* matters before calibration kicks in.
+HOST_FLOPS = 5e9                # flop/s of a scalar-ish host loop
+HOST_BW = 20e9                  # bytes/s effective host streaming
+LAUNCH_OVERHEAD = 5e-6          # per-offloaded-region dispatch cost, seconds
+# When a measured all-ref baseline is available, per-region host times are
+# rescaled so the surviving regions account for at most this share of it.
+# This pins the model to the observed time scale: raw HOST_* seeds can be
+# off by orders of magnitude on unknown hardware, and un-rescaled deltas
+# would drive composite predictions negative (into the clamp floor, where
+# ranking degenerates to the tie-break).
+HOST_SHARE = 0.9
+
+
+def _impl_genes(impl) -> tuple:
+    """Non-ref genes of an offload pattern, canonically ordered."""
+    return tuple(sorted((r, v) for r, v in dict(impl).items() if v != "ref"))
+
+
+@dataclass
+class CostModel:
+    """Predicted-seconds surrogate over composite offload genomes.
+
+    Parameters
+    ----------
+    candidates:
+        Step-3 ``SearchCandidate``-like objects (duck-typed): each must
+        carry ``region``, ``variant``, ``flops``, ``transcendentals``,
+        ``boundary_bytes``, ``alignment``.  One entry per eligible
+        (region, variant) pair; region-level numbers may repeat across a
+        region's variants (they describe the same loop).
+    baseline_seconds:
+        Optional hint for the all-ref base time.  The first all-ref
+        observation replaces it exactly.
+    """
+    candidates: list = field(default_factory=list)
+    baseline_seconds: float = 0.0
+    history: list = field(default_factory=list)   # [{pattern, predicted, measured}]
+    _delta: dict = field(default_factory=dict)    # (region, variant) -> seconds
+    _base: float = 0.0
+
+    def __post_init__(self):
+        host = {}
+        for c in self.candidates:
+            host.setdefault(c.region, self.host_seconds(c))
+        self._base = (self.baseline_seconds
+                      or sum(host.values()) or 1e-3)
+        # anchor the host estimates to the measured time scale: the
+        # surviving regions claim at most HOST_SHARE of the baseline,
+        # apportioned by their relative estimated host cost
+        total = sum(host.values())
+        if self.baseline_seconds > 0.0 and total > 0.0:
+            gain = HOST_SHARE * self.baseline_seconds / total
+            host = {r: h * gain for r, h in host.items()}
+        for c in self.candidates:
+            self._delta[(c.region, c.variant)] = (
+                self.accel_seconds(c) - host.get(c.region, 0.0))
+
+    # -- roofline seeds ------------------------------------------------
+    @staticmethod
+    def accel_seconds(c) -> float:
+        """Offloaded-region roofline: min(compute, memory) performance =
+        max(compute, memory) time, discounted by layout alignment."""
+        compute = c.flops / ACCEL_FLOPS
+        memory = c.boundary_bytes / ACCEL_BW
+        trans = c.transcendentals / ACCEL_TRANSCENDENTAL_RATE
+        align = max(getattr(c, "alignment", 1.0), 1e-3)
+        return (max(compute, memory) + trans) / align + LAUNCH_OVERHEAD
+
+    @staticmethod
+    def host_seconds(c) -> float:
+        """Loop-faithful host execution: no compute/memory overlap."""
+        flops = c.flops + TRANSCENDENTAL_WEIGHT * c.transcendentals
+        return flops / HOST_FLOPS + c.boundary_bytes / HOST_BW
+
+    # -- prediction ----------------------------------------------------
+    def predict(self, impl) -> float:
+        """Predicted run seconds of a composite genome (never negative)."""
+        t = self._base
+        for g in _impl_genes(impl):
+            t += self._delta.get(g, 0.0)
+        return max(t, 1e-9)
+
+    # -- online calibration --------------------------------------------
+    def observe(self, impl, measured_seconds: float) -> None:
+        """Feed one real measurement back (a ledger miss OR a cross-run
+        primed hit).  Kaczmarz step: the residual against the current
+        prediction is split equally over the genome's non-ref genes; an
+        all-ref observation re-bases the model exactly."""
+        if not (measured_seconds == measured_seconds      # NaN
+                and measured_seconds != float("inf")):
+            return
+        predicted = self.predict(impl)
+        genes = _impl_genes(impl)
+        from repro.core.regions import Impl
+        self.history.append({
+            "pattern": Impl(dict(impl)).describe(),
+            "predicted": predicted,
+            "measured": measured_seconds,
+        })
+        err = measured_seconds - predicted
+        if not genes:
+            self._base = measured_seconds
+            return
+        for g in genes:
+            self._delta[g] = self._delta.get(g, 0.0) + err / len(genes)
+
+    # -- diagnostics ---------------------------------------------------
+    def mean_abs_rel_error(self, last: int | None = None) -> float:
+        """Mean |predicted - measured| / measured over the observation
+        history (optionally only the last ``last`` entries)."""
+        hist = self.history[-last:] if last else self.history
+        if not hist:
+            return 0.0
+        return sum(abs(h["predicted"] - h["measured"]) / max(h["measured"], 1e-12)
+                   for h in hist) / len(hist)

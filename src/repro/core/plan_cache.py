@@ -34,13 +34,28 @@ File format (version 1)::
           "strategy": "staged",          # the SearchStrategy that found it
           "jaxpr_loop_count": 7,
           "measured_patterns": ["all-ref", "fir_bank=offload", ...],
+          "measurement_key": "ab12...",  # measurement-compatibility digest
+          "measurements": [              # EVERY pattern this search knows,
+            {                            # not just the winner — the raw
+              "pattern": "fir_bank=offload",   # material for cross-run
+              "impl": {"fir_bank": "offload"}, # ledger priming
+              "run_seconds": 0.0068,
+              "compile_seconds": 0.21,
+              "first_run_seconds": 0.008,
+              "ok": true,
+              "error": ""
+            }
+          ],
           "created_at": "2026-07-29T12:00:00+00:00"
         }
       }
     }
 
 Entries are self-describing enough to audit by hand; the key payload is
-reproducible from the program + config alone.
+reproducible from the program + config alone.  ``measurements`` accumulate:
+an entry written by a primed search re-persists the measurements it reused,
+so knowledge survives arbitrarily many search re-openings (new variant,
+changed budget, different strategy).
 """
 from __future__ import annotations
 
@@ -55,6 +70,7 @@ from typing import Optional
 import jax
 
 from repro.core.regions import variants
+from repro.core.search import impl_key
 
 CACHE_VERSION = 1
 DEFAULT_CACHE_ENV = "REPRO_PLAN_CACHE"
@@ -73,10 +89,11 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     # different reps miss each other's plans for no reason
     cfg_fields = {k: v for k, v in dataclasses.asdict(config).items()
                   if k not in ("reps", "warmup")}
-    # likewise the RNG seed and GA knobs cannot influence a non-genetic
-    # search trajectory: keying a staged plan on ga_mutation would force a
-    # full re-measure for a knob the strategy never reads
-    if cfg_fields.get("strategy", "staged") != "genetic":
+    # likewise the RNG seed and GA knobs cannot influence a staged or
+    # exhaustive trajectory: keying a staged plan on ga_mutation would force
+    # a full re-measure for a knob the strategy never reads.  genetic,
+    # surrogate, AND auto keep them (auto may resolve to the surrogate GA).
+    if cfg_fields.get("strategy", "staged") in ("staged", "exhaustive"):
         cfg_fields = {k: v for k, v in cfg_fields.items()
                       if k != "seed" and not k.startswith("ga_")}
     payload = {
@@ -104,9 +121,49 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     return f"{program.name}:{payload['backend']}:{digest}"
 
 
+def measurement_cache_key(program, backend: Optional[str] = None) -> str:
+    """Measurement-*compatibility* key: two plan runs share it exactly when
+    their Step-4 timings are comparable — same program, same backend, same
+    region shapes/static kwargs, same declared measurement conditions
+    (``cache_extra``).  Deliberately EXCLUDES everything ``plan_cache_key``
+    adds on top (variant registry, planner budgets, strategy, seed):
+    registering a new variant or changing ``d`` re-opens the *search* but
+    does not invalidate the *measurements* already taken, so a re-opened
+    search can prime its MeasurementLedger from every sibling entry with
+    the same measurement key and re-propose known patterns for free.
+    """
+    payload = {
+        "program": program.name,
+        "backend": backend or jax.default_backend(),
+        "measurement_conditions": sorted(
+            (k, repr(v)) for k, v in program.cache_extra.items()),
+        "regions": [
+            {
+                "name": r.name,
+                "args": r.arg_signature(),
+                "static_kwargs": sorted(
+                    (k, repr(v)) for k, v in r.static_kwargs.items()),
+            }
+            for r in program.regions
+        ],
+    }
+    blob = json.dumps(payload, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:20]
+
+
 class PlanCache:
     """JSON-file plan store.  Safe to share between runs; writes are
-    atomic (tmp + rename) so a crashed planner never corrupts the file."""
+    atomic (tmp + rename) so a crashed planner never corrupts the file.
+
+    Entries carry two levels of reuse:
+
+    * the full ``plan_cache_key`` match serves the *selected plan* with
+      zero new work (``AutoOffloader.plan`` cache hit);
+    * on a miss, entries whose ``measurement_key`` matches still donate
+      their per-pattern ``measurements`` (``measurements_for``) to prime
+      the new search's ledger — previously measured patterns cost zero
+      budget even though the search itself re-runs.
+    """
 
     def __init__(self, path: str | os.PathLike):
         self.path = Path(path)
@@ -140,6 +197,29 @@ class PlanCache:
                          datetime.now(timezone.utc).isoformat(timespec="seconds"))
         self._data["entries"][key] = entry
         self._flush(merge=True)
+
+    def measurements_for(self, measurement_key: str) -> list[dict]:
+        """Every persisted per-pattern measurement from entries taken under
+        the same measurement conditions (see ``measurement_cache_key``),
+        deduplicated by offload pattern — newest entry wins.  These are the
+        dicts ``AutoOffloader`` turns back into ledger-primed Measurements.
+        """
+        if not measurement_key:
+            return []
+        by_pattern: dict[tuple, dict] = {}
+        entries = sorted(self._data["entries"].values(),
+                         key=lambda e: str(e.get("created_at", "")))
+        for entry in entries:
+            if entry.get("measurement_key") != measurement_key:
+                continue
+            for m in entry.get("measurements", ()):
+                impl = m.get("impl")
+                if not isinstance(impl, dict) or not impl:
+                    continue                      # all-ref: re-measured fresh
+                key = impl_key(impl)              # same identity the ledger uses
+                if key:
+                    by_pattern[key] = dict(m)
+        return list(by_pattern.values())
 
     def invalidate(self, key: str) -> bool:
         existed = self._data["entries"].pop(key, None) is not None

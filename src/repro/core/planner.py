@@ -45,8 +45,10 @@ from dataclasses import dataclass, field
 import jax
 
 from repro.core import search
+from repro.core.cost_model import CostModel
 from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
-from repro.core.plan_cache import PlanCache, plan_cache_key, resolve_cache
+from repro.core.plan_cache import (PlanCache, measurement_cache_key,
+                                   plan_cache_key, resolve_cache)
 from repro.core.program import OffloadableProgram
 from repro.core.regions import Impl, offload_variants
 from repro.core.resources import ResourceEstimate, precompile
@@ -56,6 +58,60 @@ from repro.core.strategies import SearchCandidate, SearchState, make_strategy
 
 @dataclass(frozen=True)
 class PlannerConfig:
+    """Every knob of the automatic offload planner.
+
+    All fields except ``reps``/``warmup`` participate in the plan-cache
+    key; ``seed`` and the ``ga_*`` knobs participate only for strategies
+    that read them (``genetic``/``surrogate``/``auto`` — they cannot change
+    a staged or exhaustive trajectory).  See docs/plan-cache.md.
+
+    Pipeline budgets (paper §5.1.2 defaults):
+
+    * ``top_a`` (int, 5)            — Step-2 arithmetic-intensity filter
+      width: regions kept after AI ranking.
+    * ``top_c`` (int, 3)            — Step-3 resource-efficiency filter
+      width: regions kept after (region, variant) ranking.
+    * ``max_measurements`` (int, 4) — the paper's ``d``: Step-4 patterns
+      that may consume real measurements (ledger hits are free).
+    * ``resource_cap`` (float, 1.0) — summed VMEM fraction a combined
+      pattern may claim; over-cap patterns are never built.
+    * ``unroll_b`` (int, 1)         — kernel unroll knob (paper's ``b``).
+
+    Measurement fidelity (NOT in the cache key — they change timing noise,
+    never the search space):
+
+    * ``warmup`` (int, 1) / ``reps`` (int, 5) — per-pattern timing runs;
+      ``run_seconds`` is the median of ``reps``.
+
+    Step-4 search strategy (core/strategies.py):
+
+    * ``strategy`` (str, "staged")  — staged | genetic | surrogate |
+      exhaustive | auto.
+    * ``seed`` (int, 0)             — strategy RNG seed (GA determinism).
+    * ``ga_population`` (int, 6)    — genomes per generation.
+    * ``ga_generations`` (int, 4)   — generations (ledger hits free).
+    * ``ga_crossover`` (float, 0.9) — uniform-crossover probability.
+    * ``ga_mutation`` (float, 0.15) — per-gene mutation probability.
+    * ``ga_tournament`` (int, 2)    — tournament size.
+    * ``ga_elite`` (int, 1)         — elites carried over (re-measured
+      free via the ledger).
+    * ``ga_topk`` (int, 2)          — surrogate mode only: real
+      measurements per generation; the rest of the population is scored
+      by the roofline CostModel (core/cost_model.py).
+
+    Example (the config is a frozen dataclass — derive variants with
+    ``dataclasses.replace``):
+
+    >>> from repro.core.planner import PlannerConfig
+    >>> cfg = PlannerConfig(strategy="surrogate", max_measurements=8)
+    >>> cfg.ga_topk
+    2
+    >>> import dataclasses
+    >>> dataclasses.replace(cfg, ga_topk=3).ga_topk
+    3
+    >>> cfg.strategy
+    'surrogate'
+    """
     top_a: int = 5              # AI filter width (paper: 5)
     top_c: int = 3              # resource-efficiency filter width (paper: 3)
     max_measurements: int = 4   # d (paper: 4)
@@ -64,7 +120,7 @@ class PlannerConfig:
     warmup: int = 1
     reps: int = 5
     # ---- Step-4 search strategy (core/strategies.py) ----
-    strategy: str = "staged"    # staged | genetic | exhaustive
+    strategy: str = "staged"    # staged | genetic | surrogate | exhaustive | auto
     seed: int = 0               # strategy RNG seed (GA determinism)
     ga_population: int = 6      # genomes per generation
     ga_generations: int = 4     # generations (ledger hits don't spend d)
@@ -72,6 +128,7 @@ class PlannerConfig:
     ga_mutation: float = 0.15   # per-gene mutation probability
     ga_tournament: int = 2      # tournament size
     ga_elite: int = 1           # elites carried over (re-measured for free)
+    ga_topk: int = 2            # surrogate: real measurements per generation
 
 
 def _efficiency(analysis: RegionAnalysis,
@@ -131,6 +188,11 @@ class PlanReport:
     cache_key: str = ""
     strategy: str = "staged"           # which SearchStrategy produced this
     search_trace: list[dict] = field(default_factory=list)  # rounds/generations
+    # cross-run measurement reuse: patterns served from plan-cache priming
+    # (zero budget spent), and the size of the Step-3 survivor genome space
+    # (what make_strategy("auto") keys its choice on)
+    reused: list[Measurement] = field(default_factory=list)
+    search_space: int = 0
 
     def best_impl(self) -> Impl:
         """The selected pattern as a dispatchable Impl."""
@@ -161,13 +223,20 @@ class PlanReport:
             lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
                          f"  (compile {m.compile_seconds*1e3:.0f} ms)"
                          + ("" if m.ok else f"  FAILED {m.error}"))
+        for m in self.reused:
+            lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
+                         f"  [reused from plan cache, zero budget]")
         for t in self.search_trace:
             # per-pattern timings are already listed above; the trace line
             # adds the stage grouping and the proposal count (which includes
             # free ledger hits, e.g. GA elites re-proposed across generations)
             n = len(t.get("patterns", []))
-            lines.append(f"  {t.get('stage', '?')}: "
-                         f"{n} proposal{'s' if n != 1 else ''}")
+            line = (f"  {t.get('stage', '?')}: "
+                    f"{n} proposal{'s' if n != 1 else ''}")
+            if t.get("model_error") is not None:
+                line += (f"  (surrogate error "
+                         f"{t['model_error'] * 100:.1f}%)")
+            lines.append(line)
         lines.append(f"best: {self.best_pattern}  speedup={self.speedup:.2f}x")
         return "\n".join(lines)
 
@@ -180,12 +249,33 @@ class AutoOffloader:
     def plan(self, program: OffloadableProgram,
              key: jax.Array | None = None,
              cache: "PlanCache | str | None" = None) -> PlanReport:
-        """Run the configured search strategy, or serve the plan from
-        ``cache``.
+        """Plan ``program``: run the configured Step-4 search strategy, or
+        serve the plan from ``cache``.
 
-        ``cache`` may be a PlanCache, a path, or None (no caching).  A hit
-        returns with zero new measurements; a miss runs the full pipeline
-        and stores the selected pattern.
+        Parameters
+        ----------
+        program:
+            The ``OffloadableProgram`` to plan (regions + build + samples).
+        key:
+            PRNG key for ``program.sample_inputs`` (default
+            ``jax.random.PRNGKey(0)``); does NOT affect the cache key.
+        cache:
+            A ``PlanCache``, a path, or None (no caching).  Three outcomes:
+
+            * **hit** — an entry matches the full plan key (program shapes
+              + variant registry + backend + config): the stored plan is
+              returned with zero new measurements (``from_cache=True``);
+            * **primed miss** — no plan-key match, but sibling entries
+              measured under the same conditions (``measurement_cache_key``)
+              donate their per-pattern measurements: the search re-runs,
+              and every re-proposed known pattern is served from the
+              ledger for free (``report.reused``);
+            * **cold miss** — the full pipeline runs and the selection is
+              stored (together with ALL its measurements) for both kinds
+              of reuse above.
+
+        Returns a ``PlanReport``; ``report.best_impl()`` is the
+        dispatchable selected pattern.
         """
         store = resolve_cache(cache)
         ckey = plan_cache_key(program, self.config) if store is not None else ""
@@ -193,10 +283,10 @@ class AutoOffloader:
             entry = store.get(ckey)
             if entry is not None:
                 return self._report_from_cache(program, ckey, entry)
-        report = self._plan_measured(program, key)
+        report = self._plan_measured(program, key, store=store)
         report.cache_key = ckey
         if store is not None and self._sound(report):
-            store.put(ckey, self._cache_entry(report))
+            store.put(ckey, self._cache_entry(report, program))
         return report
 
     @staticmethod
@@ -214,7 +304,8 @@ class AutoOffloader:
 
     # ------------------------------------------------------------------
     def _plan_measured(self, program: OffloadableProgram,
-                       key: jax.Array | None) -> PlanReport:
+                       key: jax.Array | None,
+                       store: "PlanCache | None" = None) -> PlanReport:
         cfg = self.config
         key = key if key is not None else jax.random.PRNGKey(0)
         sample = program.sample_inputs(key)
@@ -298,28 +389,75 @@ class AutoOffloader:
                                         pattern=impl.describe(), impl=impl)
 
         ledger = MeasurementLedger(measure, budget=cfg.max_measurements)
+        # cross-run reuse: sibling cache entries measured under the same
+        # conditions donate their per-pattern measurements — a re-proposed
+        # known pattern is served from the ledger and costs zero d
+        primed: list[Measurement] = []
+        if store is not None:
+            mkey = measurement_cache_key(program)
+            for m in store.measurements_for(mkey):
+                impl = Impl(m.get("impl", {}))
+                pm = Measurement(
+                    pattern=str(m.get("pattern", impl.describe())),
+                    compile_seconds=float(m.get("compile_seconds", 0.0)),
+                    run_seconds=float(m.get("run_seconds", float("inf"))),
+                    runs=[], ok=bool(m.get("ok", False)),
+                    error=str(m.get("error", "")), impl=dict(impl),
+                    first_run_seconds=float(m.get("first_run_seconds", 0.0)))
+                ledger.prime(impl, pm)
+                primed.append(pm)
         # the all-ref baseline pre-exists (the paper's running CPU system):
-        # a strategy re-proposing it gets the measurement without spending d
+        # a strategy re-proposing it gets the measurement without spending d.
+        # Primed AFTER the cache donations so this run's fresh baseline wins.
         ledger.prime(Impl(), report.baseline)
         state = SearchState(
             regions=eff_regions,
             ranked=[SearchCandidate(p.region, p.variant,
                                     p.resources.resource_fraction,
-                                    p.efficiency)
+                                    p.efficiency,
+                                    flops=p.analysis.flops,
+                                    transcendentals=p.analysis.transcendentals,
+                                    boundary_bytes=p.analysis.boundary_bytes,
+                                    alignment=p.analysis.alignment)
                     for p in ranked if p.region in eff_regions],
             resource_cap=cfg.resource_cap,
             seed=cfg.seed,
             baseline=report.baseline)
-        strategy = make_strategy(cfg)
+        # the roofline surrogate, seeded from the Step-3 estimates and
+        # pre-calibrated on everything already measured: the fresh baseline
+        # (exact re-base), then the primed cross-run measurements —
+        # single-gene patterns first, so their deltas are pinned exactly
+        # before combined patterns distribute their residuals
+        model = CostModel(candidates=state.ranked,
+                          baseline_seconds=report.baseline.run_seconds
+                          if report.baseline.ok else 0.0)
+        if report.baseline.ok:
+            model.observe(Impl(), report.baseline.run_seconds)
+        for m in sorted((p for p in primed if p.ok and p.mapping()),
+                        key=lambda m: (len(m.mapping()), m.pattern)):
+            model.observe(Impl(m.mapping()), m.run_seconds)
+        state.cost_model = model
+
+        # |non-ref genome space| of the survivors — make_strategy("auto")
+        # picks exhaustive/staged/surrogate from this
+        space = 1
+        for r in eff_regions:
+            space *= 1 + len(state.variants_of(r))
+        report.search_space = max(space - 1, 0)
+        strategy = make_strategy(cfg, space_size=report.search_space)
         strategy.run(state, ledger)
         report.measurements = ledger.order       # budget-consuming, in order
+        report.reused = [m for m in ledger.reused() if m.mapping()]
         report.strategy = strategy.name
         report.search_trace = state.trace
         report.skipped_combinations = state.skipped
 
         # ---- Step 5: select -------------------------------------------
+        # over everything the strategy was served this run: fresh
+        # measurements AND cross-run primed patterns it re-proposed
         base_ok = report.baseline.ok
-        ok_measurements = [m for m in report.measurements if m.ok]
+        ok_measurements = [m for m in ledger.served
+                           if m.ok and m.mapping()]
         best = min(ok_measurements, key=lambda m: m.run_seconds,
                    default=None)
         if best is not None and (not base_ok
@@ -358,9 +496,28 @@ class AutoOffloader:
         return report
 
     @staticmethod
-    def _cache_entry(report: PlanReport) -> dict:
+    def _cache_entry(report: PlanReport, program: OffloadableProgram) -> dict:
         baseline_s = report.baseline.run_seconds if report.baseline else 0.0
+        # persist EVERY ok per-pattern measurement (fresh + reused), not just
+        # the winner: sibling searches with the same measurement_key prime
+        # their ledgers from these.  Failed measurements are deliberately
+        # dropped — a compile hiccup must be retried, not remembered.
+        persisted = [
+            {
+                "pattern": m.pattern,
+                "impl": m.mapping(),
+                "run_seconds": m.run_seconds,
+                "compile_seconds": m.compile_seconds,
+                "first_run_seconds": m.first_run_seconds,
+                "ok": m.ok,
+                "error": m.error,
+            }
+            for m in list(report.measurements) + list(report.reused)
+            if m.ok and m.mapping()
+        ]
         return {
+            "measurement_key": measurement_cache_key(program),
+            "measurements": persisted,
             "program": report.program,
             "backend": jax.default_backend(),
             "best_pattern": dict(report.best_pattern),

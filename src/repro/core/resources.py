@@ -15,6 +15,11 @@ read Flip-Flop/LUT utilization.  On TPU: lower the variant with
 ``resource_fraction`` = vmem_bytes / 16 MiB, the denominator of the paper's
 resource efficiency.  Patterns whose summed fraction exceeds the cap are
 never built (paper: combinations over the FPGA resource limit are skipped).
+
+These Step-3 estimates do double duty: together with the Step-2 analysis
+counts (flops / bytes / transcendentals / alignment) they seed the roofline
+``CostModel`` (core/cost_model.py) that the ``surrogate`` search strategy
+uses to score whole genome populations without spending measurements.
 """
 from __future__ import annotations
 

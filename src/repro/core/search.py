@@ -99,18 +99,36 @@ class MeasurementLedger:
     ``measure_fn`` and decrements ``budget`` on a miss, and returns ``None``
     once the budget is exhausted.  ``order`` is the measured (miss) sequence
     — exactly the patterns that consumed budget, in measurement order.
+
+    ``prime`` seeds an entry that never bills against ``d``: the all-ref
+    baseline (the paper's pre-existing CPU system), and — since plan-cache
+    entries persist *every* per-pattern measurement, not just the winner —
+    measurements recovered from previous runs of the same program on the
+    same backend (``AutoOffloader`` primes them on a cache miss, so a
+    re-opened search re-proposing a known pattern costs zero ``d``).
+
+    ``served`` is every distinct Measurement handed to the strategy this
+    run, hits and misses alike, in first-served order — the set the planner
+    selects the winner from.  A primed entry the strategy never re-proposes
+    stays out of ``served``: the current search vouches only for patterns
+    it actually asked for.
     """
     measure_fn: Callable
     budget: int
     hits: int = 0
     misses: int = 0
     order: list[Measurement] = field(default_factory=list)
+    served: list[Measurement] = field(default_factory=list)
     _entries: dict[tuple, Measurement] = field(default_factory=dict)
+    _primed: set = field(default_factory=set)
+    _served_keys: set = field(default_factory=set)
 
     def prime(self, impl, measurement: Measurement) -> None:
         """Record a measurement taken outside the budget (the all-ref
-        baseline: pre-existing in the paper, never billed against ``d``)."""
-        self._entries[impl_key(impl)] = measurement
+        baseline, or a measurement persisted by a previous plan run)."""
+        k = impl_key(impl)
+        self._entries[k] = measurement
+        self._primed.add(k)
 
     def seen(self, impl) -> bool:
         return impl_key(impl) in self._entries
@@ -118,12 +136,24 @@ class MeasurementLedger:
     def exhausted(self) -> bool:
         return self.budget <= 0
 
+    def reused(self) -> list[Measurement]:
+        """Primed (cross-run / baseline) measurements the strategy actually
+        re-proposed this run — served for free."""
+        return [m for m in self.served
+                if impl_key(m.impl or {}) in self._primed]
+
+    def _serve(self, key: tuple, m: Measurement) -> Measurement:
+        if key not in self._served_keys:
+            self._served_keys.add(key)
+            self.served.append(m)
+        return m
+
     def measure(self, impl) -> Optional[Measurement]:
         k = impl_key(impl)
         hit = self._entries.get(k)
         if hit is not None:
             self.hits += 1
-            return hit
+            return self._serve(k, hit)
         if self.budget <= 0:
             return None
         self.budget -= 1
@@ -131,4 +161,4 @@ class MeasurementLedger:
         m = self.measure_fn(impl)
         self._entries[k] = m
         self.order.append(m)
-        return m
+        return self._serve(k, m)

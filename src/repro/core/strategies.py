@@ -21,6 +21,14 @@ search a pluggable layer:
   from ``SearchState.seed`` (given deterministic measurements).
 * ``ExhaustiveSearch`` — the full genome space in deterministic order; the
   parity oracle for tiny spaces.
+* ``"surrogate"``       — ``GeneticSearch(surrogate=True)``: the population
+  is scored by the roofline ``CostModel`` (core/cost_model.py) built from
+  the Step-3 lowering estimates, and real measurements go only to each
+  generation's predicted top-k (at most ``d - 1`` in total); every real
+  measurement recalibrates the model.
+* ``"auto"``            — ``make_strategy`` picks from the space size:
+  exhaustive when the space fits the budget, staged for small spaces, the
+  surrogate GA otherwise.
 
 The interface is ask–tell, expressed as a Python generator: a strategy's
 ``proposals(state, ledger)`` *asks* by yielding an ``Impl`` and is *told*
@@ -40,16 +48,33 @@ from dataclasses import dataclass, field
 from repro.core.regions import Impl
 from repro.core.search import Measurement, MeasurementLedger
 
-STRATEGY_NAMES = ("staged", "genetic", "exhaustive")
+STRATEGY_NAMES = ("staged", "genetic", "surrogate", "exhaustive", "auto")
+
+# make_strategy("auto") thresholds (documented in docs/search-strategies.md):
+# the whole space is affordable -> exhaustive; a small space is covered well
+# by the paper's 3-round heuristic -> staged; otherwise the surrogate GA.
+AUTO_STAGED_MAX_SPACE = 16
 
 
 @dataclass(frozen=True)
 class SearchCandidate:
-    """One eligible (region, variant) destination with its Step-3 numbers."""
+    """One eligible (region, variant) destination with its Step-3 numbers.
+
+    ``resource_fraction``/``efficiency`` drive ranking and cap accounting;
+    the raw analysis counts (``flops``, ``transcendentals``,
+    ``boundary_bytes``, ``alignment``) seed the roofline ``CostModel`` used
+    by the surrogate search.  They default to 0/1 so hand-built states
+    (tests, tools) that only rank still work — a CostModel built from such
+    candidates just predicts pure launch overhead.
+    """
     region: str
     variant: str
     resource_fraction: float
     efficiency: float
+    flops: float = 0.0              # raw region flops (not penalty-weighted)
+    transcendentals: float = 0.0
+    boundary_bytes: float = 0.0
+    alignment: float = 1.0
 
 
 @dataclass
@@ -69,6 +94,10 @@ class SearchState:
     baseline: Measurement | None = None
     skipped: list[str] = field(default_factory=list)
     trace: list[dict] = field(default_factory=list)
+    # roofline surrogate (core/cost_model.py), attached by the planner when
+    # Step-3 analysis is available; duck-typed: predict/observe/history.
+    # None -> surrogate-mode strategies degrade to their measured behavior.
+    cost_model: object | None = None
 
     def variants_of(self, region: str) -> list[SearchCandidate]:
         """The region's eligible destinations, best-ranked first."""
@@ -180,18 +209,46 @@ class StagedSearch(SearchStrategy):
 class GeneticSearch(SearchStrategy):
     """GA over mixed {region -> destination} genomes (arXiv 2004.08548 /
     2011.12431).  One gene per surviving region; allele space
-    ``{ref} ∪ eligible variants``.  Deterministic from ``state.seed``."""
+    ``{ref} ∪ eligible variants``.  Deterministic from ``state.seed``.
+
+    With ``surrogate=True`` (strategy name ``"surrogate"``) the whole
+    population is scored with the roofline ``CostModel`` on
+    ``state.cost_model`` and real measurements are spent only on each
+    generation's predicted top-``topk``:
+
+    * generation 0 measures its top-k unconditionally (calibration
+      bootstrap — the model starts from uncalibrated roofline seeds);
+    * later generations measure an unseen genome only when the model
+      predicts it beats the best measurement so far (a genome the model
+      calls slower is scored by prediction alone);
+    * total real measurements are capped at ``d - 1`` (floor 1) — the
+      surrogate never exhausts the verification budget, so at any
+      ``d >= 2`` it consumes strictly fewer real measurements than the
+      plain GA whenever the plain GA would spend all of ``d``, while the
+      model scores the (much larger) rest of the population for free;
+    * every real measurement (ledger misses AND free cross-run hits) is
+      fed back through ``CostModel.observe`` to recalibrate the model.
+
+    Selection still only ever picks a *measured* pattern — predicted
+    fitness steers evolution, never the final answer.  Without a cost
+    model on the state, surrogate mode degrades to plain measured GA.
+    """
     name = "genetic"
 
     def __init__(self, population: int = 6, generations: int = 4,
                  crossover: float = 0.9, mutation: float = 0.15,
-                 tournament: int = 2, elite: int = 1):
+                 tournament: int = 2, elite: int = 1,
+                 topk: int = 2, surrogate: bool = False):
         self.population = max(population, 2)
         self.generations = max(generations, 1)
         self.crossover = crossover
         self.mutation = mutation
         self.tournament = max(tournament, 1)
         self.elite = max(elite, 0)
+        self.topk = max(topk, 1)
+        self.surrogate = surrogate
+        if surrogate:
+            self.name = "surrogate"
 
     def proposals(self, state: SearchState, ledger: MeasurementLedger):
         regions = list(state.regions)
@@ -201,6 +258,17 @@ class GeneticSearch(SearchStrategy):
         alleles = {r: ["ref"] + [c.variant for c in state.variants_of(r)]
                    for r in regions}
         frac = state.fractions()
+        model = state.cost_model if self.surrogate else None
+        # surrogate self-cap: never spend the full verification budget —
+        # at most d-1 real measurements in total (floor 1), so at any
+        # d >= 2 the surrogate consumes strictly fewer measurements than
+        # the plain GA whenever the plain GA would exhaust the budget
+        real_cap = (max(1, ledger.budget - 1)
+                    if model is not None else float("inf"))
+        real_spent = 0
+        best_measured = (state.baseline.run_seconds
+                         if state.baseline is not None and state.baseline.ok
+                         else float("inf"))
 
         def repair(g: dict) -> dict:
             # over-cap genomes repaired toward ref: the heaviest gene is
@@ -234,14 +302,65 @@ class GeneticSearch(SearchStrategy):
 
         for generation in range(self.generations):
             t = state.begin_stage(f"generation {generation}")
+            t["genomes"] = []
             scored: list[tuple[float, dict]] = []
-            for g in pop:
-                impl = to_impl(g)
-                m = yield impl
-                t["patterns"].append(impl.describe())
-                scored.append((m.run_seconds if m.ok else float("inf"), g))
+            impls = [to_impl(g) for g in pop]
+            obs_before = len(model.history) if model is not None else 0
+            topset: set[int] = set()
+            if model is not None:
+                # predicted fitness for the WHOLE population, ties broken by
+                # pattern string so the trajectory stays deterministic
+                order = sorted(range(len(pop)),
+                               key=lambda i: (model.predict(impls[i]),
+                                              impls[i].describe()))
+                topset = set(order[:self.topk])
+            for i, g in enumerate(pop):
+                impl = impls[i]
+                predicted = (state.cost_model.predict(impl)
+                             if state.cost_model is not None else None)
+                entry = {"pattern": impl.describe(), "predicted": predicted,
+                         "measured": None, "source": "model"}
+                if model is None:
+                    # plain measured GA: every genome costs (ledger hits free)
+                    m = yield impl
+                    t["patterns"].append(impl.describe())
+                    entry["measured"] = m.run_seconds if m.ok else None
+                    entry["source"] = "measured"
+                    t["genomes"].append(entry)
+                    scored.append((m.run_seconds if m.ok else float("inf"), g))
+                    continue
+                # surrogate: spend real measurements only where it matters
+                free = ledger.seen(impl)
+                worthwhile = (generation == 0 or free
+                              or predicted < best_measured)
+                affordable = free or (real_spent < real_cap
+                                      and not ledger.exhausted())
+                if (free or i in topset) and worthwhile and affordable:
+                    if not free:
+                        real_spent += 1
+                    m = yield impl
+                    t["patterns"].append(impl.describe())
+                    if m.ok:
+                        model.observe(impl, m.run_seconds)
+                        best_measured = min(best_measured, m.run_seconds)
+                        entry["measured"] = m.run_seconds
+                    entry["source"] = "ledger" if free else "measured"
+                    t["genomes"].append(entry)
+                    scored.append((m.run_seconds if m.ok else float("inf"), g))
+                else:
+                    t["genomes"].append(entry)
+                    scored.append((predicted, g))
             t["budget_left"] = ledger.budget
+            if model is not None:
+                t["real_measurements"] = real_spent
+                n_obs = len(model.history) - obs_before
+                t["model_error"] = (model.mean_abs_rel_error(last=n_obs)
+                                    if n_obs else None)
             if generation + 1 >= self.generations or ledger.exhausted():
+                return
+            if model is not None and real_spent >= real_cap:
+                # the measurement allowance is gone: further generations can
+                # only re-score, never change the (measured-only) selection
                 return
             scored.sort(key=lambda t: t[0])
 
@@ -293,18 +412,44 @@ class ExhaustiveSearch(SearchStrategy):
 
 
 # ---------------------------------------------------------------------------
-def make_strategy(config) -> SearchStrategy:
-    """Strategy instance from a PlannerConfig (its ``strategy`` + GA knobs)."""
+def make_strategy(config, space_size: int | None = None) -> SearchStrategy:
+    """Strategy instance from a PlannerConfig (its ``strategy`` + GA knobs).
+
+    ``strategy="auto"`` picks for the caller from the size of the genome
+    space (the planner passes ``space_size`` = |non-ref patterns| of the
+    Step-3 survivors; thresholds documented in docs/search-strategies.md):
+
+    * ``space_size <= max_measurements``  -> ``exhaustive`` (the whole
+      space is affordable: measuring everything IS the optimum),
+    * ``space_size <= AUTO_STAGED_MAX_SPACE`` -> ``staged`` (the paper's
+      3-round heuristic covers a small space well),
+    * otherwise -> the surrogate GA (predicted fitness stretches ``d``
+      over a population the measured strategies could never afford).
+
+    With no ``space_size`` (ad-hoc callers), ``auto`` falls back to
+    ``staged`` — the paper's default.
+    """
     name = getattr(config, "strategy", "staged")
+    if name == "auto":
+        if space_size is None:
+            name = "staged"
+        elif space_size <= getattr(config, "max_measurements", 4):
+            name = "exhaustive"
+        elif space_size <= AUTO_STAGED_MAX_SPACE:
+            name = "staged"
+        else:
+            name = "surrogate"
     if name == "staged":
         return StagedSearch()
-    if name == "genetic":
+    if name in ("genetic", "surrogate"):
         return GeneticSearch(population=config.ga_population,
                              generations=config.ga_generations,
                              crossover=config.ga_crossover,
                              mutation=config.ga_mutation,
                              tournament=config.ga_tournament,
-                             elite=config.ga_elite)
+                             elite=config.ga_elite,
+                             topk=getattr(config, "ga_topk", 2),
+                             surrogate=(name == "surrogate"))
     if name == "exhaustive":
         return ExhaustiveSearch()
     raise ValueError(f"unknown search strategy {name!r}; "

@@ -68,7 +68,9 @@ def main() -> None:
                     choices=list(STRATEGY_NAMES),
                     help="Step-4 search strategy for --auto-offload "
                          "(staged = paper heuristic, genetic = GA over "
-                         "mixed genomes, exhaustive = tiny-space oracle); "
+                         "mixed genomes, surrogate = roofline-predicted "
+                         "fitness with top-k real measurements, exhaustive "
+                         "= tiny-space oracle, auto = pick by space size); "
                          "part of the plan-cache key")
     ap.add_argument("--offload-seed", type=int, default=0,
                     help="strategy RNG seed for --auto-offload; kept "

@@ -116,10 +116,28 @@ def cache_insert(full_cache, one_cache, slot: int):
 
 
 class ServeEngine:
+    """Continuous-batching serving engine — the single serving path.
+
+    Public knobs (all constructor-only; none participate in the offload
+    plan-cache key — serving shape is orthogonal to the planned pattern):
+
+    * ``cfg`` (ModelConfig)  — architecture; ``cfg.reduced()`` for smoke
+      runs.
+    * ``params``             — model parameters (``factory.init_params``).
+    * ``slots`` (int, 4)     — concurrent decode lanes sharing one batched
+      KV cache.
+    * ``ctx`` (int, 128)     — per-slot cache capacity; admission control
+      rejects requests that cannot fit it.
+    * ``seed`` (int, 0)      — sampling PRNG seed: the sampled token is a
+      pure function of (seed, request id, step, logits row), so output is
+      deterministic per seed and independent of slot placement / batch mix.
+    * ``impl``               — offload pattern ({region -> variant}, e.g.
+      the planner's ``PlanReport.best_impl()``); None = architectural
+      defaults.  Planner patterns override the arch defaults per region.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  ctx: int = 128, seed: int = 0, impl=None):
-        # `impl` is an offload pattern ({region -> variant}, e.g. the
-        # planner's PlanReport.best_impl()); None = architectural defaults
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -163,10 +181,21 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                sampling: Optional[SamplingParams] = None,
                frontend: Optional[np.ndarray] = None) -> int:
-        """Queue a request.  Raises ValueError if the request cannot fit the
-        cache: prompt + frontend prefix + max_new_tokens must be <= ctx
-        (admission control — an overflow would silently overwrite the last
-        cache slot and corrupt the sequence)."""
+        """Queue a request; returns its request id (int).
+
+        * ``prompt`` (1-D int32 array, required) — the prompt tokens; must
+          be non-empty.
+        * ``max_new_tokens`` (int, 16) — decode budget; generation stops at
+          EOS or after this many tokens.
+        * ``sampling`` (SamplingParams, greedy) — ``temperature`` 0 =
+          greedy, ``top_k`` 0 = full vocabulary.
+        * ``frontend`` (array, None) — non-text prefix for multimodal archs
+          (patch embeddings / audio frames).
+
+        Raises ValueError if the request cannot fit the cache: prompt +
+        frontend prefix + max_new_tokens must be <= ctx (admission control
+        — an overflow would silently overwrite the last cache slot and
+        corrupt the sequence)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError(f"prompt must be a non-empty 1-D token array, "
@@ -301,7 +330,15 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
-        """Aggregate lifecycle stats over finished requests."""
+        """Aggregate lifecycle stats over finished requests.
+
+        Keys: ``requests_finished``, ``generated_tokens``, ``ttft_s_mean``
+        / ``ttft_s_p50`` (time to first token), ``queue_wait_s_mean``,
+        ``decode_tps_mean`` (per-request decode tokens/sec), plus compile
+        telemetry: ``prefill_traces`` (one per (bucket, frontend) shape)
+        and ``buckets`` (sorted bucket lengths seen).  These are the
+        measurement conditions ROADMAP's online-replanning item feeds back
+        into the planner."""
         done = self.finished
         ttfts = [r.ttft_s for r in done if r.ttft_s >= 0]
         waits = [r.queue_wait_s for r in done if r.slot_s >= 0]

@@ -330,9 +330,13 @@ def test_make_strategy_dispatch():
                       GeneticSearch)
     assert isinstance(make_strategy(PlannerConfig(strategy="exhaustive")),
                       ExhaustiveSearch)
+    surrogate = make_strategy(PlannerConfig(strategy="surrogate"))
+    assert isinstance(surrogate, GeneticSearch)
+    assert surrogate.surrogate and surrogate.name == "surrogate"
     with pytest.raises(ValueError):
         make_strategy(PlannerConfig(strategy="anneal"))
-    assert set(STRATEGY_NAMES) == {"staged", "genetic", "exhaustive"}
+    assert set(STRATEGY_NAMES) == {"staged", "genetic", "surrogate",
+                                   "exhaustive", "auto"}
 
 
 def test_strategy_never_exceeds_budget_mid_generator():
