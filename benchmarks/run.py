@@ -3,6 +3,7 @@
   fig4          paper Fig. 4 (tdFIR / MRI-Q automatic-offload speedups)
   conditions    paper §5.1.2 evaluation-conditions table (loop narrowing)
   strategies    staged vs genetic vs exhaustive Step-4 search at equal budget
+  verification  serial vs pipelined pattern verification (core/executor.py)
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
   roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
 
@@ -23,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig4", "conditions", "strategies",
-                             "kernels", "roofline"])
+                             "verification", "kernels", "roofline"])
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json next to the cwd for the "
                          "sections that support it")
@@ -46,6 +47,13 @@ def main() -> None:
         strategies.main(
             budget=args.budget, reps=args.reps,
             json_path="BENCH_strategies.json" if args.json else None)
+        print()
+    if args.section in ("all", "verification"):
+        print("== pipelined pattern verification (serial vs concurrent AOT) ==")
+        from benchmarks import verification
+        verification.main(
+            budget=max(args.budget, 8), reps=args.reps,
+            json_path="BENCH_verification.json" if args.json else None)
         print()
     if args.section in ("all", "fig4"):
         print("== paper Fig. 4 (automatic offload speedup) ==")

@@ -1,22 +1,33 @@
 """Perf-trajectory trend view over the CI ``BENCH_*.json`` artifacts.
 
-CI uploads ``BENCH_conditions.json`` / ``BENCH_strategies.json`` per commit
-(ROADMAP: "populate the perf trajectory").  This tool compares the current
-artifacts against a previous run's and prints per-section, per-row deltas:
+CI uploads ``BENCH_conditions.json`` / ``BENCH_strategies.json`` /
+``BENCH_verification.json`` per commit (ROADMAP: "populate the perf
+trajectory").  This tool compares the current artifacts against a rolling
+window of previous runs and prints per-section, per-row deltas:
 
     PYTHONPATH=src python -m benchmarks.trend --baseline prev/ [--current .]
 
+``--baseline`` may be a single artifact directory (or file) — one
+snapshot, the pre-window behavior — or a directory of per-run
+subdirectories (CI downloads the last ``--window`` successful runs into
+``bench-baseline/<run-id>/``); artifacts are found recursively inside each
+snapshot, so the ``gh run download`` nesting needs no flattening.
+
 Rows are matched by their identity columns (``app`` for conditions,
-``app``+``strategy`` for strategies).  Gated metrics:
+``app``+``strategy`` for strategies, ``app``+``workers``+``cached`` for
+verification).  Gated metrics compare against the **median across the
+window** — a single noisy shared-runner sample can no longer fail (or
+mask) the gate:
 
 * ``best_ms``  (lower is better) — the selected pattern's measured median,
 * ``speedup``  (higher is better) — vs the same run's own baseline.
 
 A gated metric that regresses by more than ``--threshold`` (default 20%,
-chosen for shared-runner timing noise) fails the run with a non-zero exit.
-Everything else (baseline_ms, n_measured, compile totals) is printed for
-the record but never gates.  With no baseline artifacts the tool prints a
-notice and exits 0 — the first run of a new section has nothing to compare.
+chosen for shared-runner timing noise) against the window median fails the
+run with a non-zero exit.  Everything else (baseline_ms, n_measured,
+compile totals, verification wall-clocks) is printed for the record but
+never gates.  With no baseline artifacts the tool prints a notice and
+exits 0 — the first run of a new section has nothing to compare.
 """
 from __future__ import annotations
 
@@ -25,10 +36,12 @@ import glob
 import json
 import os
 import sys
+from statistics import median
 
 SECTION_KEYS = {
     "strategies": ("app", "strategy"),
     "conditions": ("app",),
+    "verification": ("app", "workers", "cached_replan"),
 }
 # metric -> direction: +1 higher is better, -1 lower is better, 0 report-only
 METRICS = {
@@ -39,14 +52,25 @@ METRICS = {
     "n_reused": 0,
     "measured": 0,
     "compile_ms_total": 0,
+    "verify_wall_s": 0,
+    "compile_wall_s": 0,
 }
+DEFAULT_WINDOW = 5
 
 
-def load_docs(path: str) -> dict[str, dict]:
-    """``BENCH_*.json`` documents in a directory (or a single file),
-    keyed by section."""
-    files = ([path] if os.path.isfile(path)
-             else sorted(glob.glob(os.path.join(path, "BENCH_*.json"))))
+def load_docs(path: str, recursive: bool = False) -> dict[str, dict]:
+    """``BENCH_*.json`` documents in a directory (or a single file), keyed
+    by section.  ``recursive`` descends into subdirectories — used for
+    baseline snapshots, where ``gh run download`` nests each artifact in
+    its own folder (NOT for ``--current``, which would otherwise swallow
+    the baseline directory itself)."""
+    if os.path.isfile(path):
+        files = [path]
+    elif recursive:
+        files = sorted(glob.glob(os.path.join(path, "**", "BENCH_*.json"),
+                                 recursive=True))
+    else:
+        files = sorted(glob.glob(os.path.join(path, "BENCH_*.json")))
     docs = {}
     for f in files:
         try:
@@ -60,6 +84,37 @@ def load_docs(path: str) -> dict[str, dict]:
     return docs
 
 
+def _snapshot_order(name: str) -> tuple:
+    """Sort run-directory names numerically when they are run ids
+    (``gh run download`` into ``bench-baseline/<databaseId>``), else
+    lexically — newest last either way."""
+    return (0, int(name), "") if name.isdigit() else (1, 0, name)
+
+
+def load_history(path: str, window: int = DEFAULT_WINDOW) -> list[dict]:
+    """The baseline as a list of snapshots (oldest first, at most
+    ``window``).  A file or a directory with artifacts directly inside is
+    ONE snapshot (back-compatible single-baseline layout); a directory of
+    per-run subdirectories is one snapshot per run."""
+    if os.path.isfile(path):
+        return [load_docs(path)]
+    subdirs = sorted(
+        (d for d in os.listdir(path)
+         if os.path.isdir(os.path.join(path, d))
+         and glob.glob(os.path.join(path, d, "**", "BENCH_*.json"),
+                       recursive=True)),
+        key=_snapshot_order)
+    snapshots = [load_docs(os.path.join(path, d), recursive=True)
+                 for d in subdirs]
+    if not snapshots:
+        # no per-run subdirectories: the whole directory is one snapshot
+        # (the pre-window single-baseline layout, found recursively)
+        docs = load_docs(path, recursive=True)
+        if docs:
+            snapshots = [docs]
+    return snapshots[-window:]
+
+
 def row_key(section: str, row: dict) -> tuple:
     keys = SECTION_KEYS.get(section)
     if keys is None:                      # unknown section: best effort
@@ -67,30 +122,50 @@ def row_key(section: str, row: dict) -> tuple:
     return tuple(str(row.get(k)) for k in keys)
 
 
-def compare(baseline: dict[str, dict], current: dict[str, dict],
+def baseline_values(history: list[dict], section: str, key: tuple,
+                    metric: str) -> list[float]:
+    """This row's metric across every window snapshot that has it."""
+    vals = []
+    for snap in history:
+        doc = snap.get(section)
+        if doc is None:
+            continue
+        for row in doc.get("rows", []):
+            if row_key(section, row) == key and metric in row:
+                try:
+                    vals.append(float(row[metric]))
+                except (TypeError, ValueError):
+                    pass
+                break
+    return vals
+
+
+def compare(history: list[dict], current: dict[str, dict],
             threshold: float) -> list[str]:
-    """Print deltas; return the list of regression descriptions."""
+    """Print deltas vs the window median; return regression descriptions."""
     regressions: list[str] = []
     for section, cur_doc in sorted(current.items()):
-        base_doc = baseline.get(section)
-        if base_doc is None:
-            print(f"== {section}: no baseline — {len(cur_doc.get('rows', []))} "
-                  f"new rows, nothing to compare ==")
+        n_base = sum(1 for snap in history if section in snap)
+        if n_base == 0:
+            print(f"== {section}: no baseline — "
+                  f"{len(cur_doc.get('rows', []))} new rows, "
+                  f"nothing to compare ==")
             continue
-        print(f"== {section}: deltas vs baseline ==")
-        base_rows = {row_key(section, r): r for r in base_doc.get("rows", [])}
+        print(f"== {section}: deltas vs median of {n_base} baseline "
+              f"run{'s' if n_base != 1 else ''} ==")
         for row in cur_doc.get("rows", []):
             key = row_key(section, row)
-            old = base_rows.get(key)
             label = "/".join(key)
-            if old is None:
-                print(f"  {label}: new row")
-                continue
             parts = []
+            matched = False
             for metric, direction in METRICS.items():
-                if metric not in row or metric not in old:
+                if metric not in row:
                     continue
-                a, b = float(old[metric]), float(row[metric])
+                vals = baseline_values(history, section, key, metric)
+                if not vals:
+                    continue
+                matched = True
+                a, b = median(vals), float(row[metric])
                 if a == 0:
                     continue
                 delta = (b - a) / abs(a)
@@ -99,35 +174,47 @@ def compare(baseline: dict[str, dict], current: dict[str, dict],
                         (direction > 0 and delta < -threshold)
                 if worse:
                     regressions.append(
-                        f"{section}/{label}: {metric} regressed "
-                        f"{a:.2f} -> {b:.2f} ({delta:+.1%}, "
-                        f"threshold {threshold:.0%})")
-            print(f"  {label}: " + ("; ".join(parts) if parts else "no shared metrics"))
+                        f"{section}/{label}: {metric} regressed vs "
+                        f"median-of-{len(vals)} {a:.2f} -> {b:.2f} "
+                        f"({delta:+.1%}, threshold {threshold:.0%})")
+            if not matched:
+                print(f"  {label}: new row")
+            else:
+                print(f"  {label}: "
+                      + ("; ".join(parts) if parts else "no shared metrics"))
     return regressions
 
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="bench-baseline",
-                    help="directory (or file) with the previous run's "
+                    help="directory of per-run snapshot subdirectories (or "
+                         "a single artifact directory/file) with previous "
                          "BENCH_*.json artifacts")
     ap.add_argument("--current", default=".",
                     help="directory (or file) with this run's artifacts")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="gated-metric regression tolerance (fraction)")
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW,
+                    help="baseline snapshots to keep; the gate compares "
+                         "against the median of the window")
     args = ap.parse_args(argv)
 
     current = load_docs(args.current)
+    # the current artifacts must not gate against themselves when --current
+    # is a directory that also holds the baseline snapshots
     if not current:
         print(f"# no BENCH_*.json artifacts under {args.current!r}; "
               f"run `python -m benchmarks.run --json` first")
         return 1
-    baseline = load_docs(args.baseline) if os.path.exists(args.baseline) else {}
-    if not baseline:
+    history = (load_history(args.baseline, window=args.window)
+               if os.path.exists(args.baseline) else [])
+    history = [snap for snap in history if snap]
+    if not history:
         print(f"# no baseline artifacts under {args.baseline!r} — "
               f"first run of the trajectory, nothing to gate")
         return 0
-    regressions = compare(baseline, current, args.threshold)
+    regressions = compare(history, current, args.threshold)
     if regressions:
         print(f"\n{len(regressions)} regression(s) over "
               f"{args.threshold:.0%} threshold:")

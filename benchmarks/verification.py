@@ -1,0 +1,253 @@
+"""Serial vs pipelined pattern verification (core/executor.py).
+
+The paper's Step 4 is wall-clock-bound by per-pattern compilation (~3 h per
+FPGA pattern); Yamato's method compiles candidate patterns *in parallel* on
+the verification environment.  This section measures that pipelining on the
+TPU-native reproduction: the SAME multi-pattern search (>= 6 compiled
+patterns) is planned twice — ``verify_workers=1`` (the fully serial
+pre-executor pipeline) and ``verify_workers=N`` (concurrent AOT compiles,
+strictly serial timed reps) — and reports the verification wall-clock of
+each, asserting the invariants pipelining must never break:
+
+* the selected ``Impl`` is bit-identical,
+* the measured pattern sequence and per-pattern measurement counts match,
+* the ``run_seconds`` medians of the serial-timed reps stay within noise of
+  the serial baseline (reported as the max relative deviation).
+
+A third row re-plans through the same ``AutoOffloader``: its lifetime
+``CompileCache`` hands every pattern a warm executable, so re-verification
+collapses to pure timing — the hardware-independent face of the same
+pipeline (>20x here).
+
+The workload is deliberately compile-heavy (deep unrolled kernel chains on
+a small operand): on real FPGA targets compilation dominates by hours, so a
+benchmark app whose compile:run ratio is tiny would measure the wrong
+regime.  The achievable workers ratio is hardware-bound — ``max(compile)``
+vs ``Σ(compile)`` needs free cores, and XLA's CPU backend parallelizes a
+single compilation internally, competing with cross-pattern workers on
+small hosts.  ``--min-speedup 1.5`` makes the ratio a hard gate on
+verification hosts with the headroom; by default it is report-only.
+
+With ``--json PATH`` the rows land in a ``BENCH_verification.json``
+document for the CI perf trajectory (``benchmarks/trend.py``).
+
+Run:  PYTHONPATH=src python -m benchmarks.verification [--workers 4] [--json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import dispatch, register_variant, variants
+
+_registered = [False]
+
+APP = "veribench"
+N_REGIONS = 3
+DEPTH = 18          # unrolled chain length per offload variant
+SIZE = 48           # operand side; small so runs are cheap, compiles are not
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 300, body, x)
+
+
+def _heavy_offload(salt: int):
+    """A compile-heavy, run-light variant: a deep unrolled chain gives XLA a
+    big program to optimize (the FPGA-compile analogue) while the runtime
+    cost on a small operand stays tiny — so verification wall-clock is
+    compile-dominated, the regime the pipelining targets."""
+    def fn(x):
+        y = x
+        for k in range(DEPTH):
+            y = jnp.tanh(y @ x * (1.0 + (salt + k) * 1e-6)) + y * 1e-3
+        return y * 1e-3 + x
+    return fn
+
+
+def _region_names() -> list[str]:
+    return [f"{APP}_r{i}" for i in range(N_REGIONS)]
+
+
+def make_program() -> OffloadableProgram:
+    """A 3-region program whose offload variants are compile-heavy: the
+    exhaustive search over the 7-pattern non-ref space compiles >= 6
+    distinct patterns (combined patterns chain several heavy bodies)."""
+    names = _region_names()
+    if not _registered[0]:
+        for i, name in enumerate(names):
+            register_variant(name, "ref")(_slow_ref)
+            register_variant(name, "offload")(_heavy_offload(i))
+        _registered[0] = True
+
+    def build(impl):
+        def run(x):
+            for name in names:
+                x = dispatch(name, impl, x)
+            return x
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((SIZE, SIZE), jnp.float32),)
+    regions = [Region(name, variants(name)["ref"], abstract)
+               for name in names]
+    return OffloadableProgram(
+        name=APP, regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (SIZE, SIZE)),),
+        source_loop_count=N_REGIONS,
+        description="compile-heavy synthetic app for verification pipelining")
+
+
+def plan_with_workers(workers: int, budget: int, reps: int,
+                      offloader: AutoOffloader | None = None
+                      ) -> tuple[dict, AutoOffloader]:
+    """One full plan at the given executor width.  A FRESH AutoOffloader
+    per call (so no compile cache leaks between the serial and pipelined
+    runs) unless ``offloader`` is passed — the warm-re-plan row reuses one
+    to demonstrate the CompileCache on the re-verification path."""
+    cfg = PlannerConfig(max_measurements=budget, reps=reps, warmup=1,
+                        strategy="exhaustive", verify_workers=workers)
+    if offloader is None:
+        offloader = AutoOffloader(cfg)
+    else:
+        offloader.config = cfg
+    rep = offloader.plan(make_program(), jax.random.PRNGKey(0))
+    row = {
+        "app": APP,
+        "workers": workers,
+        "n_measured": len(rep.measurements),
+        "patterns": [m.pattern for m in rep.measurements],
+        "run_seconds": {m.pattern: m.run_seconds for m in rep.measurements},
+        "compile_seconds": {m.pattern: m.compile_seconds
+                            for m in rep.measurements},
+        "compile_wall_s": rep.compile_wall_s,
+        "verify_wall_s": rep.verify_wall_s,
+        "best_pattern": dict(rep.best_pattern),
+        "best_ms": rep.best_seconds * 1e3,
+        "baseline_ms": rep.baseline.run_seconds * 1e3,
+        "speedup_vs_baseline": rep.speedup,
+    }
+    return row, offloader
+
+
+def main(workers: int = 4, budget: int = 8, reps: int = 3,
+         min_speedup: float | None = None,
+         json_path: str | None = None) -> dict:
+    # a throwaway warm-up plan pays the process's one-time XLA/runtime costs
+    # so neither measured run inherits them
+    plan_with_workers(1, budget=budget, reps=1)
+
+    for attempt in range(2):
+        serial, _ = plan_with_workers(1, budget=budget, reps=reps)
+        piped, warm_off = plan_with_workers(workers, budget=budget,
+                                            reps=reps)
+        # re-verification through the AutoOffloader-lifetime CompileCache:
+        # the same search re-runs (no plan cache wired), but every
+        # pattern's executable is already warm — verification collapses to
+        # pure timing
+        warm, _ = plan_with_workers(workers, budget=budget, reps=reps,
+                                    offloader=warm_off)
+        warm["cached_replan"] = True
+        if serial["best_pattern"] == piped["best_pattern"] \
+                == warm["best_pattern"]:
+            break
+        # the searches time for real: on a noisy shared host a scheduler
+        # stall inside one pattern's reps can flip near-tied medians.  One
+        # retry separates "the pipeline changed the answer" (deterministic,
+        # will repeat) from plain timing noise (won't).
+        print("# winner mismatch between runs — retrying once "
+              "(shared-host timing noise)")
+
+    # -- invariants: pipelining must change wall-clock, never the answer --
+    assert serial["best_pattern"] == piped["best_pattern"], (
+        f"pipelined selection diverged: {serial['best_pattern']} "
+        f"vs {piped['best_pattern']}")
+    assert serial["patterns"] == piped["patterns"], (
+        f"measured pattern sequence diverged:\n  serial   "
+        f"{serial['patterns']}\n  pipelined {piped['patterns']}")
+    assert serial["n_measured"] == piped["n_measured"] >= 6, (
+        f"expected >= 6 identically-counted compiled patterns, got "
+        f"{serial['n_measured']} vs {piped['n_measured']}")
+
+    assert warm["best_pattern"] == serial["best_pattern"], (
+        f"warm re-plan selection diverged: {serial['best_pattern']} "
+        f"vs {warm['best_pattern']}")
+    speedup = (serial["verify_wall_s"] / piped["verify_wall_s"]
+               if piped["verify_wall_s"] > 0 else float("inf"))
+    warm_speedup = (serial["verify_wall_s"] / warm["verify_wall_s"]
+                    if warm["verify_wall_s"] > 0 else float("inf"))
+    rel_dev = max(
+        abs(piped["run_seconds"][p] - serial["run_seconds"][p])
+        / max(serial["run_seconds"][p], 1e-12)
+        for p in serial["run_seconds"])
+
+    print("app,workers,cached,n_measured,verify_wall_s,compile_wall_s,"
+          "best_ms,pattern")
+    for r in (serial, piped, warm):
+        pat = "+".join(f"{k}={v}" for k, v in sorted(r["best_pattern"].items())
+                       ) or "all-ref"
+        print(f"{r['app']},{r['workers']},{int(bool(r.get('cached_replan')))},"
+              f"{r['n_measured']},{r['verify_wall_s']:.3f},"
+              f"{r['compile_wall_s']:.3f},{r['best_ms']:.3f},{pat}")
+    print(f"# pipeline speedup (verification wall-clock, "
+          f"{piped['workers']} vs 1 workers): {speedup:.2f}x over "
+          f"{serial['n_measured']} compiled patterns")
+    print(f"# compile-cache re-plan speedup (warm executables, same search): "
+          f"{warm_speedup:.2f}x")
+    print(f"# identical winner: True; max run_seconds median deviation "
+          f"vs serial: {rel_dev:.1%}")
+    ncpu = os.cpu_count() or 1
+    if min_speedup is not None:
+        verdict = "PASS" if speedup >= min_speedup else "FAIL"
+        print(f"# gate: speedup {speedup:.2f}x vs required "
+              f"{min_speedup:.2f}x -> {verdict} ({ncpu} CPUs visible)")
+        assert speedup >= min_speedup, (
+            f"pipelined verification speedup {speedup:.2f}x below the "
+            f"{min_speedup:.2f}x gate")
+    else:
+        print(f"# gate: report-only ({ncpu} CPU(s) visible; the workers "
+              f"ratio is bounded by free cores and XLA's own compile "
+              f"parallelism — pass --min-speedup 1.5 to enforce on a "
+              f"verification host with headroom)")
+
+    doc = {
+        "section": "verification",
+        "backend": jax.default_backend(),
+        "cpus": ncpu,
+        "budget": budget,
+        "pipeline_speedup": speedup,
+        "cached_replan_speedup": warm_speedup,
+        "identical_winner": True,
+        "max_run_seconds_rel_dev": rel_dev,
+        "rows": [serial, piped, warm],
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4,
+                    help="verify_workers of the pipelined run")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="measurement budget d (>= 7 covers the whole space)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail below this wall-clock ratio (e.g. 1.5 on a "
+                         "verification host with spare cores); default: "
+                         "report-only — the ratio is hardware-bound")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a BENCH_verification.json document here")
+    a = ap.parse_args()
+    main(workers=a.workers, budget=a.budget, reps=a.reps,
+         min_speedup=a.min_speedup, json_path=a.json)

@@ -46,6 +46,7 @@ from ``PlannerConfig.seed``.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 
 from repro.core.intensity import TRANSCENDENTAL_WEIGHT
@@ -71,6 +72,16 @@ LAUNCH_OVERHEAD = 5e-6          # per-offloaded-region dispatch cost, seconds
 # would drive composite predictions negative (into the clamp floor, where
 # ranking degenerates to the tie-break).
 HOST_SHARE = 0.9
+
+# Residual-bias detection for gene pairs (ROADMAP "region interaction
+# terms", first step: detect + surface, no correction yet).  A multi-gene
+# observation whose residual keeps the same sign BIAS_STREAK times in a row
+# for some gene pair marks that pair as non-additive — a combined pattern
+# changing fusion boundaries breaks the per-gene additivity the model
+# assumes.  Residuals within BIAS_REL_DEADBAND of the measured time count
+# as zero (plain timing noise must not accumulate into a "bias").
+BIAS_STREAK = 3
+BIAS_REL_DEADBAND = 0.01
 
 
 def _impl_genes(impl) -> tuple:
@@ -99,6 +110,9 @@ class CostModel:
     history: list = field(default_factory=list)   # [{pattern, predicted, measured}]
     _delta: dict = field(default_factory=dict)    # (region, variant) -> seconds
     _base: float = 0.0
+    # (gene, gene) -> [relative residuals of the multi-gene observations
+    # containing the pair, in observation order] — see bias_notes()
+    _pair_resid: dict = field(default_factory=dict)
 
     def __post_init__(self):
         host = {}
@@ -163,8 +177,46 @@ class CostModel:
         if not genes:
             self._base = measured_seconds
             return
+        if len(genes) >= 2:
+            # record the pre-update relative residual against every gene
+            # pair in the genome: the Kaczmarz step below absorbs the error,
+            # so a pair whose residual keeps coming back with the same sign
+            # is systematically non-additive (see bias_notes)
+            rel = err / max(abs(measured_seconds), 1e-12)
+            for pair in itertools.combinations(genes, 2):
+                self._pair_resid.setdefault(pair, []).append(rel)
         for g in genes:
             self._delta[g] = self._delta.get(g, 0.0) + err / len(genes)
+
+    def bias_notes(self) -> list[dict]:
+        """Gene pairs whose multi-gene observations stay systematically
+        biased: the trailing run of same-sign relative residuals (deadband
+        ``BIAS_REL_DEADBAND``) reached ``BIAS_STREAK``.  ``sign`` reads from
+        the model's point of view — ``"under-predicted"`` means combined
+        patterns keep measuring *slower* than the additive prediction
+        (positive interaction, e.g. a broken fusion boundary).  Surfaced on
+        ``PlanReport.search_trace`` by the planner so the surrogate's trust
+        in composite predictions is visible."""
+        notes = []
+        for pair, resid in sorted(self._pair_resid.items()):
+            streak, sign = 0, 0
+            for r in reversed(resid):
+                s = (1 if r > BIAS_REL_DEADBAND
+                     else -1 if r < -BIAS_REL_DEADBAND else 0)
+                if s == 0 or (sign and s != sign):
+                    break
+                sign = s
+                streak += 1
+            if streak >= BIAS_STREAK:
+                tail = resid[-streak:]
+                notes.append({
+                    "pair": [list(g) for g in pair],
+                    "sign": ("under-predicted" if sign > 0
+                             else "over-predicted"),
+                    "observations": streak,
+                    "mean_rel_residual": sum(tail) / streak,
+                })
+        return notes
 
     # -- diagnostics ---------------------------------------------------
     def mean_abs_rel_error(self, last: int | None = None) -> float:

@@ -46,12 +46,14 @@ import jax
 
 from repro.core import search
 from repro.core.cost_model import CostModel
+from repro.core.executor import (CompileCache, VerificationExecutor,
+                                 VerifyJob, compile_key)
 from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
 from repro.core.plan_cache import (PlanCache, measurement_cache_key,
                                    plan_cache_key, resolve_cache)
 from repro.core.program import OffloadableProgram
 from repro.core.regions import Impl, offload_variants
-from repro.core.resources import ResourceEstimate, precompile
+from repro.core.resources import ResourceEstimate, precompile_many
 from repro.core.search import Measurement, MeasurementLedger
 from repro.core.strategies import SearchCandidate, SearchState, make_strategy
 
@@ -99,6 +101,15 @@ class PlannerConfig:
       measurements per generation; the rest of the population is scored
       by the roofline CostModel (core/cost_model.py).
 
+    Verification executor (core/executor.py):
+
+    * ``verify_workers`` (int, 1)   — thread-pool width for concurrent AOT
+      compilation in Steps 3 and 4 (timed reps stay strictly serial at any
+      width; the measured sequence and the selected pattern are identical
+      for every value).  ``1`` is the fully serial pre-executor pipeline.
+      Part of the plan-cache key so pipelined and serial plan provenance
+      stay distinguishable.
+
     Example (the config is a frozen dataclass — derive variants with
     ``dataclasses.replace``):
 
@@ -129,6 +140,8 @@ class PlannerConfig:
     ga_tournament: int = 2      # tournament size
     ga_elite: int = 1           # elites carried over (re-measured for free)
     ga_topk: int = 2            # surrogate: real measurements per generation
+    # ---- verification executor (core/executor.py) ----
+    verify_workers: int = 1     # concurrent AOT-compile threads (1 = serial)
 
 
 def _efficiency(analysis: RegionAnalysis,
@@ -193,6 +206,15 @@ class PlanReport:
     # (what make_strategy("auto") keys its choice on)
     reused: list[Measurement] = field(default_factory=list)
     search_space: int = 0
+    # pipelined-verification wall-clock accounting (core/executor.py):
+    # verify_wall_s is the wall of the batched Step-4 verification phases
+    # (compile + timed reps), compile_wall_s the portion the serial
+    # pipeline was actually BLOCKED waiting on compiles — with workers > 1
+    # it shrinks toward max-of-compiles per batch while the per-pattern
+    # Measurement.compile_seconds (true compile durations) stay unchanged
+    verify_workers: int = 1
+    verify_wall_s: float = 0.0
+    compile_wall_s: float = 0.0
 
     def best_impl(self) -> Impl:
         """The selected pattern as a dispatchable Impl."""
@@ -227,6 +249,23 @@ class PlanReport:
             lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
                          f"  [reused from plan cache, zero budget]")
         for t in self.search_trace:
+            if "pairs" in t:          # cost-model pair-bias notes
+                lines.append(f"  {t.get('stage', '?')}: " + "; ".join(
+                    f"{'+'.join('='.join(g) for g in p['pair'])} "
+                    f"{p['sign']} x{p['observations']} "
+                    f"(mean {p['mean_rel_residual']:+.1%})"
+                    for p in t["pairs"]))
+                continue
+            if "workers" in t:        # verification-executor accounting
+                lines.append(
+                    f"  {t.get('stage', '?')}: workers={t['workers']} "
+                    f"batches={t.get('batches', 0)} "
+                    f"compile_wall={t.get('compile_wall_s', 0.0)*1e3:.0f} ms "
+                    f"(of {t.get('compile_seconds_total', 0.0)*1e3:.0f} ms "
+                    f"compiled) verify_wall="
+                    f"{t.get('verify_wall_s', 0.0)*1e3:.0f} ms "
+                    f"cache_hits={t.get('compile_cache_hits', 0)}")
+                continue
             # per-pattern timings are already listed above; the trace line
             # adds the stage grouping and the proposal count (which includes
             # free ledger hits, e.g. GA elites re-proposed across generations)
@@ -244,6 +283,11 @@ class PlanReport:
 class AutoOffloader:
     def __init__(self, config: PlannerConfig = PlannerConfig()):
         self.config = config
+        # offloader-lifetime compile memo: a pattern compiled once for a
+        # (program, shapes) pair is never compiled again by this instance —
+        # the cache-primed re-plan path (changed budget/strategy/variant
+        # registry) re-verifies through warm executables
+        self.compile_cache = CompileCache()
 
     # ------------------------------------------------------------------
     def plan(self, program: OffloadableProgram,
@@ -332,149 +376,198 @@ class AutoOffloader:
         report.ai_selected = ai_set
 
         # ---- Step 3: resource filter over (region, variant) pairs -----
-        region_map = {r.name: r for r in program.regions}
-        pairs: list[VariantCandidate] = []
-        for c in cands:
-            if c.region not in ai_set:
-                continue
-            r = region_map[c.region]
-            for var, fn in offload_variants(c.region).items():
-                est = precompile(c.region, var, fn, r.analysis_args,
-                                 r.static_kwargs)
+        # the cheap lowering of EVERY (region, variant) pair fans out on the
+        # verification executor — with verify_workers > 1 the per-pair
+        # ``precompile`` calls run concurrently (order-preserving, so the
+        # ranking below is identical at any worker count)
+        executor = VerificationExecutor(workers=cfg.verify_workers,
+                                        cache=self.compile_cache)
+        try:
+            region_map = {r.name: r for r in program.regions}
+            pairs: list[VariantCandidate] = []
+            lower_jobs: list[tuple] = []
+            lower_meta: list[tuple] = []
+            for c in cands:
+                if c.region not in ai_set:
+                    continue
+                r = region_map[c.region]
+                for var, fn in offload_variants(c.region).items():
+                    lower_jobs.append((c.region, var, fn, r.analysis_args,
+                                       r.static_kwargs))
+                    lower_meta.append((c, var))
+            for (c, var), est in zip(
+                    lower_meta,
+                    precompile_many(lower_jobs, mapper=executor.map_concurrent)):
                 c.variant_estimates[var] = est
                 pairs.append(VariantCandidate(c.region, var, c.analysis, est))
-        eligible = [p for p in pairs if p.resources.lower_ok
-                    and p.resources.resource_fraction <= cfg.resource_cap]
+            eligible = [p for p in pairs if p.resources.lower_ok
+                        and p.resources.resource_fraction <= cfg.resource_cap]
 
-        def rank_key(p: VariantCandidate):
-            # efficiency first; the region's declared deploy/measure
-            # preference breaks ties (equal AI + equal fraction is common
-            # for same-shaped variants)
-            r = region_map[p.region]
-            preferred = p.variant in (r.deploy_variant, r.measure_variant)
-            return (-p.efficiency, 0 if preferred else 1, p.variant)
+            def rank_key(p: VariantCandidate):
+                # efficiency first; the region's declared deploy/measure
+                # preference breaks ties (equal AI + equal fraction is common
+                # for same-shaped variants)
+                r = region_map[p.region]
+                preferred = p.variant in (r.deploy_variant, r.measure_variant)
+                return (-p.efficiency, 0 if preferred else 1, p.variant)
 
-        ranked = sorted(eligible, key=rank_key)
+            ranked = sorted(eligible, key=rank_key)
 
-        # per-region variant ranking; top-c regions by their best pair
-        variants_of: dict[str, list[VariantCandidate]] = {}
-        for p in ranked:
-            variants_of.setdefault(p.region, []).append(p)
-        eff_regions: list[str] = []
-        for p in ranked:
-            if p.region not in eff_regions:
-                eff_regions.append(p.region)
-            if len(eff_regions) == cfg.top_c:
-                break
-        report.eff_selected = eff_regions
-        report.eff_pairs = [(p.region, p.variant) for p in ranked
-                            if p.region in eff_regions]
-        for c in cands:                         # mirror best pair for reports
-            best = variants_of.get(c.region, [])
-            if best:
-                c.best_variant = best[0].variant
-                c.resources = best[0].resources
-            elif c.variant_estimates:           # all failed/over-cap: show one
-                c.resources = next(iter(c.variant_estimates.values()))
+            # per-region variant ranking; top-c regions by their best pair
+            variants_of: dict[str, list[VariantCandidate]] = {}
+            for p in ranked:
+                variants_of.setdefault(p.region, []).append(p)
+            eff_regions: list[str] = []
+            for p in ranked:
+                if p.region not in eff_regions:
+                    eff_regions.append(p.region)
+                if len(eff_regions) == cfg.top_c:
+                    break
+            report.eff_selected = eff_regions
+            report.eff_pairs = [(p.region, p.variant) for p in ranked
+                                if p.region in eff_regions]
+            for c in cands:                         # mirror best pair for reports
+                best = variants_of.get(c.region, [])
+                if best:
+                    c.best_variant = best[0].variant
+                    c.resources = best[0].resources
+                elif c.variant_estimates:           # all failed/over-cap: show one
+                    c.resources = next(iter(c.variant_estimates.values()))
 
-        # ---- Step 4: measured pattern search (pluggable strategy) -----
-        report.baseline = search.time_callable(
-            full_ref, sample, warmup=cfg.warmup, reps=cfg.reps,
-            pattern="all-ref", impl=Impl())
+            # ---- Step 4: measured pattern search (pluggable strategy) -----
+            report.baseline = search.time_callable(
+                full_ref, sample, warmup=cfg.warmup, reps=cfg.reps,
+                pattern="all-ref", impl=Impl())
 
-        def measure(impl: Impl) -> Measurement:
-            fn = program.build(impl)
-            return search.time_callable(fn, sample, warmup=cfg.warmup,
-                                        reps=cfg.reps,
-                                        pattern=impl.describe(), impl=impl)
+            def _job(impl) -> VerifyJob:
+                impl = Impl(impl)
+                return VerifyJob(key=compile_key(program.name, impl, sample),
+                                 fn=program.build(impl), args=sample,
+                                 pattern=impl.describe(), impl=dict(impl))
 
-        ledger = MeasurementLedger(measure, budget=cfg.max_measurements)
-        # cross-run reuse: sibling cache entries measured under the same
-        # conditions donate their per-pattern measurements — a re-proposed
-        # known pattern is served from the ledger and costs zero d
-        primed: list[Measurement] = []
-        if store is not None:
-            mkey = measurement_cache_key(program)
-            for m in store.measurements_for(mkey):
-                impl = Impl(m.get("impl", {}))
-                pm = Measurement(
-                    pattern=str(m.get("pattern", impl.describe())),
-                    compile_seconds=float(m.get("compile_seconds", 0.0)),
-                    run_seconds=float(m.get("run_seconds", float("inf"))),
-                    runs=[], ok=bool(m.get("ok", False)),
-                    error=str(m.get("error", "")), impl=dict(impl),
-                    first_run_seconds=float(m.get("first_run_seconds", 0.0)))
-                ledger.prime(impl, pm)
-                primed.append(pm)
-        # the all-ref baseline pre-exists (the paper's running CPU system):
-        # a strategy re-proposing it gets the measurement without spending d.
-        # Primed AFTER the cache donations so this run's fresh baseline wins.
-        ledger.prime(Impl(), report.baseline)
-        state = SearchState(
-            regions=eff_regions,
-            ranked=[SearchCandidate(p.region, p.variant,
-                                    p.resources.resource_fraction,
-                                    p.efficiency,
-                                    flops=p.analysis.flops,
-                                    transcendentals=p.analysis.transcendentals,
-                                    boundary_bytes=p.analysis.boundary_bytes,
-                                    alignment=p.analysis.alignment)
-                    for p in ranked if p.region in eff_regions],
-            resource_cap=cfg.resource_cap,
-            seed=cfg.seed,
-            baseline=report.baseline)
-        # the roofline surrogate, seeded from the Step-3 estimates and
-        # pre-calibrated on everything already measured: the fresh baseline
-        # (exact re-base), then the primed cross-run measurements —
-        # single-gene patterns first, so their deltas are pinned exactly
-        # before combined patterns distribute their residuals
-        model = CostModel(candidates=state.ranked,
-                          baseline_seconds=report.baseline.run_seconds
-                          if report.baseline.ok else 0.0)
-        if report.baseline.ok:
-            model.observe(Impl(), report.baseline.run_seconds)
-        for m in sorted((p for p in primed if p.ok and p.mapping()),
-                        key=lambda m: (len(m.mapping()), m.pattern)):
-            model.observe(Impl(m.mapping()), m.run_seconds)
-        state.cost_model = model
+            def measure(impl: Impl) -> Measurement:
+                return executor.measure_one(_job(impl), warmup=cfg.warmup,
+                                            reps=cfg.reps)
 
-        # |non-ref genome space| of the survivors — make_strategy("auto")
-        # picks exhaustive/staged/surrogate from this
-        space = 1
-        for r in eff_regions:
-            space *= 1 + len(state.variants_of(r))
-        report.search_space = max(space - 1, 0)
-        strategy = make_strategy(cfg, space_size=report.search_space)
-        strategy.run(state, ledger)
-        report.measurements = ledger.order       # budget-consuming, in order
-        report.reused = [m for m in ledger.reused() if m.mapping()]
-        report.strategy = strategy.name
-        report.search_trace = state.trace
-        report.skipped_combinations = state.skipped
+            def measure_batch(impls: list) -> list:
+                return executor.measure_batch([_job(i) for i in impls],
+                                              warmup=cfg.warmup, reps=cfg.reps)
 
-        # ---- Step 5: select -------------------------------------------
-        # over everything the strategy was served this run: fresh
-        # measurements AND cross-run primed patterns it re-proposed
-        base_ok = report.baseline.ok
-        ok_measurements = [m for m in ledger.served
-                           if m.ok and m.mapping()]
-        best = min(ok_measurements, key=lambda m: m.run_seconds,
-                   default=None)
-        if best is not None and (not base_ok
-                                 or best.run_seconds < report.baseline.run_seconds):
-            report.best_pattern = best.mapping()
-            report.best_seconds = best.run_seconds
-            # a failed baseline gives no meaningful reference: still select
-            # the fastest working pattern, but never claim a speedup (and
-            # _sound() keeps this search out of the plan cache)
-            report.speedup = (report.baseline.run_seconds / best.run_seconds
-                              if base_ok else 1.0)
-        else:
-            report.best_pattern = {}
-            report.best_seconds = (report.baseline.run_seconds
-                                   if base_ok else 0.0)
-            report.speedup = 1.0
-        return report
+            def prefetch(impls: list) -> None:
+                executor.prefetch([_job(i) for i in impls])
+
+            ledger = MeasurementLedger(measure, budget=cfg.max_measurements,
+                                       measure_batch_fn=measure_batch,
+                                       prefetch_fn=prefetch)
+            # cross-run reuse: sibling cache entries measured under the same
+            # conditions donate their per-pattern measurements — a re-proposed
+            # known pattern is served from the ledger and costs zero d
+            primed: list[Measurement] = []
+            if store is not None:
+                mkey = measurement_cache_key(program)
+                for m in store.measurements_for(mkey):
+                    impl = Impl(m.get("impl", {}))
+                    pm = Measurement(
+                        pattern=str(m.get("pattern", impl.describe())),
+                        compile_seconds=float(m.get("compile_seconds", 0.0)),
+                        run_seconds=float(m.get("run_seconds", float("inf"))),
+                        runs=[], ok=bool(m.get("ok", False)),
+                        error=str(m.get("error", "")), impl=dict(impl),
+                        first_run_seconds=float(m.get("first_run_seconds", 0.0)))
+                    ledger.prime(impl, pm)
+                    primed.append(pm)
+            # the all-ref baseline pre-exists (the paper's running CPU system):
+            # a strategy re-proposing it gets the measurement without spending d.
+            # Primed AFTER the cache donations so this run's fresh baseline wins.
+            ledger.prime(Impl(), report.baseline)
+            state = SearchState(
+                regions=eff_regions,
+                ranked=[SearchCandidate(p.region, p.variant,
+                                        p.resources.resource_fraction,
+                                        p.efficiency,
+                                        flops=p.analysis.flops,
+                                        transcendentals=p.analysis.transcendentals,
+                                        boundary_bytes=p.analysis.boundary_bytes,
+                                        alignment=p.analysis.alignment)
+                        for p in ranked if p.region in eff_regions],
+                resource_cap=cfg.resource_cap,
+                seed=cfg.seed,
+                baseline=report.baseline)
+            # the roofline surrogate, seeded from the Step-3 estimates and
+            # pre-calibrated on everything already measured: the fresh baseline
+            # (exact re-base), then the primed cross-run measurements —
+            # single-gene patterns first, so their deltas are pinned exactly
+            # before combined patterns distribute their residuals
+            model = CostModel(candidates=state.ranked,
+                              baseline_seconds=report.baseline.run_seconds
+                              if report.baseline.ok else 0.0)
+            if report.baseline.ok:
+                model.observe(Impl(), report.baseline.run_seconds)
+            for m in sorted((p for p in primed if p.ok and p.mapping()),
+                            key=lambda m: (len(m.mapping()), m.pattern)):
+                model.observe(Impl(m.mapping()), m.run_seconds)
+            state.cost_model = model
+
+            # |non-ref genome space| of the survivors — make_strategy("auto")
+            # picks exhaustive/staged/surrogate from this
+            space = 1
+            for r in eff_regions:
+                space *= 1 + len(state.variants_of(r))
+            report.search_space = max(space - 1, 0)
+            strategy = make_strategy(cfg, space_size=report.search_space)
+            strategy.run(state, ledger)
+            executor.shutdown()     # sync final cache stats before reading them
+            report.measurements = ledger.order       # budget-consuming, in order
+            report.reused = [m for m in ledger.reused() if m.mapping()]
+            report.strategy = strategy.name
+            report.search_trace = state.trace
+            report.skipped_combinations = state.skipped
+            # cost-model residual-bias notes (ROADMAP "region interaction
+            # terms"): pairs whose multi-gene observations stayed systematically
+            # biased are surfaced so the surrogate's trust in composite
+            # predictions is visible
+            bias = model.bias_notes()
+            if bias:
+                report.search_trace.append(
+                    {"stage": "cost-model pair bias", "pairs": bias})
+            # pipelined-verification wall-clock accounting
+            stats = executor.stats.as_dict()
+            report.search_trace.append({"stage": "verification executor",
+                                        **stats})
+            report.verify_workers = cfg.verify_workers
+            report.verify_wall_s = stats["verify_wall_s"]
+            report.compile_wall_s = stats["compile_wall_s"]
+
+            # ---- Step 5: select -------------------------------------------
+            # over everything the strategy was served this run: fresh
+            # measurements AND cross-run primed patterns it re-proposed
+            base_ok = report.baseline.ok
+            ok_measurements = [m for m in ledger.served
+                               if m.ok and m.mapping()]
+            best = min(ok_measurements, key=lambda m: m.run_seconds,
+                       default=None)
+            if best is not None and (not base_ok
+                                     or best.run_seconds < report.baseline.run_seconds):
+                report.best_pattern = best.mapping()
+                report.best_seconds = best.run_seconds
+                # a failed baseline gives no meaningful reference: still select
+                # the fastest working pattern, but never claim a speedup (and
+                # _sound() keeps this search out of the plan cache)
+                report.speedup = (report.baseline.run_seconds / best.run_seconds
+                                  if base_ok else 1.0)
+            else:
+                report.best_pattern = {}
+                report.best_seconds = (report.baseline.run_seconds
+                                       if base_ok else 0.0)
+                report.speedup = 1.0
+            return report
+        finally:
+            # shutdown is idempotent; the finally guards the pool and the
+            # offloader-lifetime CompileCache against ANY exception from
+            # Step 3 onward — an aborted plan must neither leak worker
+            # threads nor leave a transiently-failed compile future to be
+            # served as permanent on the next plan()
+            executor.shutdown()
 
     # ------------------------------------------------------------------
     def _report_from_cache(self, program: OffloadableProgram, ckey: str,
@@ -490,6 +583,7 @@ class AutoOffloader:
             from_cache=True,
             cache_key=ckey,
             strategy=str(entry.get("strategy", "staged")),
+            verify_workers=int(entry.get("verify_workers", 1)),
         )
         report.baseline = Measurement("all-ref", 0.0, baseline_s, [],
                                       impl={})
@@ -531,4 +625,8 @@ class AutoOffloader:
             "strategy": report.strategy,
             "jaxpr_loop_count": report.jaxpr_loop_count,
             "measured_patterns": [m.pattern for m in report.measurements],
+            # provenance of the verification pipeline that produced the plan
+            "verify_workers": report.verify_workers,
+            "verify_wall_s": report.verify_wall_s,
+            "compile_wall_s": report.compile_wall_s,
         }

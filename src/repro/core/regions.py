@@ -21,10 +21,22 @@ from typing import Callable, Optional
 
 REGISTRY: dict[str, dict[str, Callable]] = {}
 
+# bumped on every registration (including re-registration under an existing
+# name): anything that memoizes compiled artifacts of variant code — the
+# verification executor's CompileCache — keys on this so swapping a
+# variant's implementation can never serve a stale executable
+_REGISTRY_VERSION = [0]
+
+
+def registry_version() -> int:
+    """Monotonic counter of variant (re-)registrations."""
+    return _REGISTRY_VERSION[0]
+
 
 def register_variant(region: str, variant: str) -> Callable:
     def deco(fn: Callable) -> Callable:
         REGISTRY.setdefault(region, {})[variant] = fn
+        _REGISTRY_VERSION[0] += 1
         return fn
     return deco
 

@@ -107,6 +107,19 @@ def precompile(region: str, variant: str, fn: Callable, args,
                                 time.perf_counter() - t0, False, f"{type(e).__name__}: {e}")
 
 
+def precompile_many(jobs, mapper=map) -> list[ResourceEstimate]:
+    """Step-3 fan-out: lower many (region, variant) pairs at once.
+
+    ``jobs`` are ``(region, variant, fn, args, static_kwargs)`` tuples;
+    ``mapper`` is any order-preserving map — the planner passes
+    ``VerificationExecutor.map_concurrent`` so the per-pair lowering calls
+    (each independent, like the paper's per-loop HDL-stage compiles) run
+    concurrently under ``verify_workers``.  Results come back in job order,
+    so the efficiency ranking downstream is identical at any worker count.
+    """
+    return list(mapper(lambda j: precompile(*j), list(jobs)))
+
+
 # ---------------------------------------------------------------------------
 # VMEM estimators mirroring the kernels' BlockSpecs
 # ---------------------------------------------------------------------------

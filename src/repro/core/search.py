@@ -12,6 +12,16 @@ compilation cost and the first execution is reported separately
 (hours per FPGA pattern); folding the first run into it misreports exactly
 the quantity the paper's budget ``d`` exists to bound.
 
+The compile and run phases are split (:func:`aot_compile` +
+``time_callable(..., precompiled=...)``) so a verification executor
+(core/executor.py) can compile many candidate patterns concurrently and
+hand each pre-built executable to the strictly *serial* timing phase —
+``run_seconds`` medians are never taken while another pattern's timed reps
+share the device.  The split also fixes the failure accounting: a pattern
+whose compile succeeds but whose run fails still reports its true
+``compile_seconds`` (the paper-central cost), and a failed compile reports
+the time spent failing.
+
 Timing uses ``time.perf_counter`` (monotonic, highest available resolution):
 ``time.time`` is subject to NTP slew / wall-clock adjustments and can make
 ``run_seconds`` jitter or even go negative across an adjustment.
@@ -20,10 +30,14 @@ Timing uses ``time.perf_counter`` (monotonic, highest available resolution):
 search strategies propose offload patterns through it, a pattern re-proposed
 within one plan run (e.g. a GA elite surviving into the next generation) is
 served from the ledger, and only ledger *misses* consume the measurement
-budget ``d``.
+budget ``d``.  The ledger is thread-safe (compile workers may race on the
+same pattern) and speaks both single (``measure``) and batched
+(``measure_batch``) ask–tell, plus a free ``prefetch`` hint channel for
+speculative compile-ahead.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -45,10 +59,30 @@ class Measurement:
     # planner attached one (e.g. ad-hoc time_callable use).
     impl: dict | None = None
     first_run_seconds: float = 0.0   # first post-compile execution
+    # wall-clock the (serial) verification pipeline was actually blocked
+    # waiting for this pattern's compile.  Equals compile_seconds when the
+    # compile ran inline; much smaller when a concurrent executor had the
+    # executable warm before the timing phase reached this pattern.
+    compile_wall_s: float = 0.0
 
     def mapping(self) -> dict:
         """The measured {region -> variant} mapping (empty = all-ref)."""
         return dict(self.impl) if self.impl else {}
+
+
+@dataclass
+class CompiledArtifact:
+    """One AOT compile outcome: the executable (or the failure) plus the
+    true compile duration.  Produced by :func:`aot_compile` — possibly on a
+    worker thread — and consumed by ``time_callable(precompiled=...)`` on
+    the serial timing thread."""
+    compiled: object | None          # the AOT executable; None if it failed
+    compile_seconds: float
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.compiled is not None
 
 
 def _block(tree) -> None:
@@ -57,28 +91,83 @@ def _block(tree) -> None:
             leaf.block_until_ready()
 
 
+def aot_lower(fn, args) -> tuple:
+    """Tracing/lowering half of the AOT path: ``jit -> lower``.  This is
+    Python tracing — GIL-bound — so a concurrent executor runs it on the
+    driver thread and ships only :func:`finish_compile` (the GIL-releasing
+    XLA compile) to its worker pool.  Returns ``(lowered | None, seconds,
+    error)`` and never raises."""
+    t0 = time.perf_counter()
+    try:
+        return jax.jit(fn).lower(*args), time.perf_counter() - t0, ""
+    except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
+        return None, time.perf_counter() - t0, f"{type(e).__name__}: {e}"
+
+
+def finish_compile(lowered, lower_seconds: float = 0.0,
+                   error: str = "") -> CompiledArtifact:
+    """XLA-compile a lowered module (the GIL-releasing half — safe to run
+    many concurrently on a thread pool).  ``compile_seconds`` on the
+    artifact is the FULL AOT cost: the lowering seconds handed in plus the
+    compile itself.  Never raises."""
+    if lowered is None:
+        return CompiledArtifact(None, lower_seconds, error)
+    t0 = time.perf_counter()
+    try:
+        compiled = lowered.compile()
+        return CompiledArtifact(
+            compiled, lower_seconds + time.perf_counter() - t0)
+    except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
+        return CompiledArtifact(
+            None, lower_seconds + time.perf_counter() - t0,
+            f"{type(e).__name__}: {e}")
+
+
+def aot_compile(fn, args) -> CompiledArtifact:
+    """AOT-compile ``fn`` for ``args`` (``jit -> lower -> compile``) and
+    time it.  Never raises: a failed lower/compile returns a non-``ok``
+    artifact that still accounts the seconds spent failing — compile cost
+    is the paper's central constraint even for rejected patterns."""
+    return finish_compile(*aot_lower(fn, args))
+
+
 def time_callable(fn, args, *, warmup: int = 1, reps: int = 5,
-                  pattern: str = "", impl: dict | None = None) -> Measurement:
+                  pattern: str = "", impl: dict | None = None,
+                  precompiled: CompiledArtifact | None = None) -> Measurement:
+    """Measure one offload pattern: AOT compile (unless a ``precompiled``
+    artifact is handed in), then first run, warmup, and ``reps`` timed
+    executions; ``run_seconds`` is the median of the reps.
+
+    The compile and run phases are accounted separately on BOTH the success
+    and the failure paths: a run-phase failure still reports the (real)
+    ``compile_seconds`` of its successful compile."""
     impl = dict(impl) if impl is not None else None
+    art = precompiled if precompiled is not None else aot_compile(fn, args)
+    if not art.ok:
+        return Measurement(pattern, art.compile_seconds, float("inf"), [],
+                           False, art.error, impl=impl,
+                           compile_wall_s=art.compile_seconds)
     try:
         t0 = time.perf_counter()
-        compiled = jax.jit(fn).lower(*args).compile()
-        compile_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        _block(compiled(*args))
+        _block(art.compiled(*args))
         first_run_s = time.perf_counter() - t0
         for _ in range(max(warmup - 1, 0)):
-            _block(compiled(*args))
+            _block(art.compiled(*args))
         runs = []
         for _ in range(reps):
             t = time.perf_counter()
-            _block(compiled(*args))
+            _block(art.compiled(*args))
             runs.append(time.perf_counter() - t)
-        return Measurement(pattern, compile_s, float(np.median(runs)), runs,
-                           impl=impl, first_run_seconds=first_run_s)
+        return Measurement(pattern, art.compile_seconds,
+                           float(np.median(runs)), runs, impl=impl,
+                           first_run_seconds=first_run_s,
+                           compile_wall_s=art.compile_seconds)
     except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
-        return Measurement(pattern, 0.0, float("inf"), [], False,
-                           f"{type(e).__name__}: {e}", impl=impl)
+        # the compile SUCCEEDED and only the run failed: its compile cost is
+        # real and must be accounted (previously misreported as 0.0)
+        return Measurement(pattern, art.compile_seconds, float("inf"), [],
+                           False, f"{type(e).__name__}: {e}", impl=impl,
+                           compile_wall_s=art.compile_seconds)
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +189,14 @@ class MeasurementLedger:
     once the budget is exhausted.  ``order`` is the measured (miss) sequence
     — exactly the patterns that consumed budget, in measurement order.
 
+    ``measure_batch(impls)`` is the batched ask: every hit is served free,
+    misses consume budget *in batch order* until it runs out (``None`` for
+    the unaffordable tail), and the affordable misses are measured together
+    through ``measure_batch_fn`` when one is wired (the concurrent
+    verification executor: all compiles in flight at once, timed reps
+    strictly serial).  Without a batch fn, misses fall back to sequential
+    ``measure_fn`` calls — identical results, no pipelining.
+
     ``prime`` seeds an entry that never bills against ``d``: the all-ref
     baseline (the paper's pre-existing CPU system), and — since plan-cache
     entries persist *every* per-pattern measurement, not just the winner —
@@ -107,14 +204,25 @@ class MeasurementLedger:
     same backend (``AutoOffloader`` primes them on a cache miss, so a
     re-opened search re-proposing a known pattern costs zero ``d``).
 
+    ``prefetch(impls)`` is a free hint — "these patterns may be proposed
+    soon" — forwarded (ledger-missing subset only) to ``prefetch_fn`` so an
+    executor can speculatively compile ahead.  It never measures, never
+    spends budget, and is a no-op without a hook.
+
     ``served`` is every distinct Measurement handed to the strategy this
     run, hits and misses alike, in first-served order — the set the planner
     selects the winner from.  A primed entry the strategy never re-proposes
     stays out of ``served``: the current search vouches only for patterns
     it actually asked for.
+
+    The ledger is thread-safe: concurrent ``measure`` calls on the same
+    pattern collapse to one measurement (the losers wait and are served the
+    winner's entry as hits), and budget accounting stays exact under races.
     """
     measure_fn: Callable
     budget: int
+    measure_batch_fn: Optional[Callable] = None
+    prefetch_fn: Optional[Callable] = None
     hits: int = 0
     misses: int = 0
     order: list[Measurement] = field(default_factory=list)
@@ -122,16 +230,20 @@ class MeasurementLedger:
     _entries: dict[tuple, Measurement] = field(default_factory=dict)
     _primed: set = field(default_factory=set)
     _served_keys: set = field(default_factory=set)
+    _inflight: dict = field(default_factory=dict)   # key -> threading.Event
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def prime(self, impl, measurement: Measurement) -> None:
         """Record a measurement taken outside the budget (the all-ref
         baseline, or a measurement persisted by a previous plan run)."""
         k = impl_key(impl)
-        self._entries[k] = measurement
-        self._primed.add(k)
+        with self._lock:
+            self._entries[k] = measurement
+            self._primed.add(k)
 
     def seen(self, impl) -> bool:
-        return impl_key(impl) in self._entries
+        with self._lock:
+            return impl_key(impl) in self._entries
 
     def exhausted(self) -> bool:
         return self.budget <= 0
@@ -143,6 +255,7 @@ class MeasurementLedger:
                 if impl_key(m.impl or {}) in self._primed]
 
     def _serve(self, key: tuple, m: Measurement) -> Measurement:
+        # callers hold self._lock
         if key not in self._served_keys:
             self._served_keys.add(key)
             self.served.append(m)
@@ -150,15 +263,115 @@ class MeasurementLedger:
 
     def measure(self, impl) -> Optional[Measurement]:
         k = impl_key(impl)
-        hit = self._entries.get(k)
-        if hit is not None:
-            self.hits += 1
-            return self._serve(k, hit)
-        if self.budget <= 0:
-            return None
-        self.budget -= 1
-        self.misses += 1
-        m = self.measure_fn(impl)
-        self._entries[k] = m
-        self.order.append(m)
-        return self._serve(k, m)
+        while True:
+            with self._lock:
+                hit = self._entries.get(k)
+                if hit is not None:
+                    self.hits += 1
+                    return self._serve(k, hit)
+                ev = self._inflight.get(k)
+                if ev is None:
+                    if self.budget <= 0:
+                        return None
+                    self.budget -= 1
+                    self.misses += 1
+                    ev = threading.Event()
+                    self._inflight[k] = ev
+                    break
+            # another thread is measuring this exact pattern: wait for its
+            # entry instead of double-spending budget on a duplicate
+            ev.wait()
+        try:
+            m = self.measure_fn(impl)
+        except BaseException:
+            # measure_fn must return failure Measurements, never raise; if
+            # it does anyway (a test helper calling pytest.fail), release
+            # any waiters before propagating so nothing deadlocks
+            with self._lock:
+                self._inflight.pop(k, None)
+            ev.set()
+            raise
+        with self._lock:
+            self._entries[k] = m
+            self.order.append(m)
+            self._inflight.pop(k, None)
+            res = self._serve(k, m)
+        ev.set()
+        return res
+
+    def measure_batch(self, impls) -> list[Optional[Measurement]]:
+        """Batched ask: one ``Optional[Measurement]`` per input, in order.
+        Hits (including in-batch duplicates) are free; misses consume budget
+        in batch order and are measured together via ``measure_batch_fn``
+        when available, so their compiles can run concurrently while the
+        timed reps stay strictly serial."""
+        keys = [impl_key(i) for i in impls]
+        to_measure: list[tuple] = []          # (key, impl) misses, batch order
+        with self._lock:
+            reserved = set()
+            for k, impl in zip(keys, impls):
+                if (k in self._entries or k in reserved
+                        or k in self._inflight):
+                    continue
+                if self.budget <= 0:
+                    continue
+                self.budget -= 1
+                self.misses += 1
+                reserved.add(k)
+                self._inflight[k] = threading.Event()
+                to_measure.append((k, impl))
+        measured_keys = {k for k, _ in to_measure}
+        if to_measure:
+            batch = [impl for _, impl in to_measure]
+            try:
+                if self.measure_batch_fn is not None:
+                    ms = list(self.measure_batch_fn(batch))
+                else:
+                    ms = [self.measure_fn(impl) for impl in batch]
+            except BaseException:
+                with self._lock:
+                    for k, _ in to_measure:
+                        ev = self._inflight.pop(k, None)
+                        if ev is not None:
+                            ev.set()
+                raise
+            with self._lock:
+                for (k, _), m in zip(to_measure, ms):
+                    self._entries[k] = m
+                    self.order.append(m)
+                    ev = self._inflight.pop(k, None)
+                    if ev is not None:
+                        ev.set()
+        # patterns another thread is measuring right now: wait so the
+        # assembly below can serve their entries instead of dropping them
+        for k in set(keys) - measured_keys:
+            with self._lock:
+                ev = self._inflight.get(k)
+            if ev is not None:
+                ev.wait()
+        out: list[Optional[Measurement]] = []
+        with self._lock:
+            first_seen: set = set()
+            for k in keys:
+                m = self._entries.get(k)
+                if m is None:                 # unaffordable: budget ran out
+                    out.append(None)
+                    continue
+                if not (k in measured_keys and k not in first_seen):
+                    self.hits += 1            # pre-existing or in-batch dup
+                first_seen.add(k)
+                out.append(self._serve(k, m))
+        return out
+
+    def prefetch(self, impls) -> None:
+        """Free compile-ahead hint.  Forwards the subset the ledger has no
+        entry (or in-flight measurement) for to ``prefetch_fn``; never
+        measures and never consumes budget."""
+        if self.prefetch_fn is None:
+            return
+        with self._lock:
+            fresh = [i for i in impls
+                     if impl_key(i) not in self._entries
+                     and impl_key(i) not in self._inflight]
+        if fresh:
+            self.prefetch_fn(fresh)

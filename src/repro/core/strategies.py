@@ -38,6 +38,22 @@ so a genome re-proposed within one run (a GA elite, a duplicate offspring)
 is served from the ledger and only ledger misses consume budget.  The
 strategy never sees the program or the clock — everything it may exploit is
 in the shared ``SearchState``.
+
+A strategy may also yield a *batch* — a ``list`` of Impls — and is told a
+list of ``Optional[Measurement]`` in the same order (``None`` marks the
+unaffordable tail once the budget runs out mid-batch).  Batches are how
+naturally-parallel stages (a GA generation, a staged round) hand the
+verification executor (core/executor.py) all their ledger-missing compiles
+at once: AOT compilation runs concurrently, the timed reps stay strictly
+serial, and the measured (budget-consuming) sequence — hence the selected
+winner — is independent of the worker count.  Relative to the single-yield
+protocol, a batch may additionally serve ledger *hits* positioned after
+the point where the budget died (the serial walk would have stopped
+there): strictly more reuse of already-known measurements, never more
+budget.  Single-yield strategies keep working unchanged.
+``ledger.prefetch(impls)`` is the free speculative-compile-ahead hint
+channel (the surrogate GA prefetches its predicted top-2k each
+generation).
 """
 from __future__ import annotations
 
@@ -128,28 +144,48 @@ class SearchStrategy:
 
     def proposals(self, state: SearchState, ledger: MeasurementLedger):
         """Generator protocol: ``yield impl`` asks for a measurement; the
-        ``yield`` expression evaluates to the Measurement (tell).  Strategies
-        may read ``ledger.budget``/``ledger.seen`` but never measure
-        directly."""
+        ``yield`` expression evaluates to the Measurement (tell).  ``yield
+        [impl, ...]`` asks for a *batch* and evaluates to a same-order list
+        of ``Optional[Measurement]`` (``None`` once the budget ran out
+        mid-batch) — batched proposals let the verification executor
+        compile concurrently while the timed reps stay serial.  Strategies
+        may read ``ledger.budget``/``ledger.seen`` and hint
+        ``ledger.prefetch`` but never measure directly."""
         raise NotImplementedError
 
     def run(self, state: SearchState, ledger: MeasurementLedger) -> None:
         gen = self.proposals(state, ledger)
         try:
-            impl = next(gen)
+            proposal = next(gen)
             while True:
-                m = ledger.measure(impl)
+                if isinstance(proposal, (list, tuple)):
+                    # batched ask: hits free, misses measured together (the
+                    # executor compiles them concurrently), None marks the
+                    # unaffordable tail — the strategy decides how to stop
+                    results = (ledger.measure_batch(list(proposal))
+                               if proposal else [])
+                    proposal = gen.send(results)
+                    continue
+                m = ledger.measure(proposal)
                 if m is None:            # budget exhausted mid-proposal
                     gen.close()
                     return
-                impl = gen.send(m)
+                proposal = gen.send(m)
         except StopIteration:
             return
 
 
 # ---------------------------------------------------------------------------
 class StagedSearch(SearchStrategy):
-    """The paper's 3-round heuristic, extracted verbatim from the planner."""
+    """The paper's 3-round heuristic, extracted verbatim from the planner.
+
+    Each round is one *batch* proposal: all of a round's patterns are
+    handed to the ledger together, so the verification executor can AOT-
+    compile them concurrently while the timed measurements keep the exact
+    serial order the original per-pattern loop had (the golden parity test
+    replays that order).  A ``None`` mid-batch means the budget died inside
+    the round — exactly where the serial protocol would have been cut off —
+    so the strategy stops without opening the later rounds."""
     name = "staged"
 
     def proposals(self, state: SearchState, ledger: MeasurementLedger):
@@ -158,51 +194,68 @@ class StagedSearch(SearchStrategy):
 
         # trace entries are appended up-front and filled per measurement, so
         # a budget exhaustion mid-round still leaves an accurate trace
-        # round 1: each surviving region's best destination, singly
+        # round 1: each surviving region's best destination, singly —
+        # batched as one concurrent-compile round
         t1 = state.begin_stage("round 1 (best destination per region)")
+        picks = [(region, state.variants_of(region)[0].variant)
+                 for region in state.regions]
+        results = yield [Impl({r: v}) for r, v in picks]
         round1: list[tuple[str, str, Measurement]] = []
-        for region in state.regions:
-            top = state.variants_of(region)[0]
-            impl = Impl({region: top.variant})
-            m = yield impl
-            t1["patterns"].append(impl.describe())
-            round1.append((region, top.variant, m))
+        died = False
+        for (region, variant), m in zip(picks, results):
+            if m is None:
+                died = True
+                continue
+            t1["patterns"].append(Impl({region: variant}).describe())
+            round1.append((region, variant, m))
 
         # A failed baseline measures as inf, which would promote EVERY ok
         # round-1 measurement to "winner" — combinations must only be built
         # against a meaningful reference.
         winners = [(r, v) for r, v, m in round1
                    if m.ok and base_ok and m.run_seconds < base.run_seconds]
+        if died:
+            return
 
         # round 2: mixed cross-region combinations of round-1 winners
         # (largest combo first), resource-capped on the chosen variants
         t2 = state.begin_stage("round 2 (winner combinations)")
-        for size in range(len(winners), 1, -1):
-            if ledger.exhausted():
-                break
-            for combo in itertools.combinations(winners, size):
-                if ledger.exhausted():
-                    break
-                impl = Impl(dict(combo))
-                if state.impl_fraction(impl) > state.resource_cap:
-                    state.skipped.append(
-                        "+".join(f"{r}={v}" for r, v in combo))
+        combos: list[Impl] = []
+        if not ledger.exhausted():
+            for size in range(len(winners), 1, -1):
+                for combo in itertools.combinations(winners, size):
+                    impl = Impl(dict(combo))
+                    if state.impl_fraction(impl) > state.resource_cap:
+                        state.skipped.append(
+                            "+".join(f"{r}={v}" for r, v in combo))
+                        continue
+                    combos.append(impl)
+        if combos:
+            results = yield combos
+            for impl, m in zip(combos, results):
+                if m is None:
+                    died = True
                     continue
-                yield impl
                 t2["patterns"].append(impl.describe())
+        if died:
+            return
 
         # round 3: leftover budget tries runner-up destinations singly
         t3 = state.begin_stage("round 3 (runner-up destinations)")
         tried = {(r, v) for r, v, _ in round1}
-        for c in state.ranked:
-            if ledger.exhausted():
-                break
-            if c.region not in state.regions or (c.region, c.variant) in tried:
-                continue
-            tried.add((c.region, c.variant))
-            impl = Impl({c.region: c.variant})
-            yield impl
-            t3["patterns"].append(impl.describe())
+        singles: list[Impl] = []
+        if not ledger.exhausted():
+            for c in state.ranked:
+                if (c.region not in state.regions
+                        or (c.region, c.variant) in tried):
+                    continue
+                tried.add((c.region, c.variant))
+                singles.append(Impl({c.region: c.variant}))
+        if singles:
+            results = yield singles
+            for impl, m in zip(singles, results):
+                if m is not None:
+                    t3["patterns"].append(impl.describe())
 
 
 # ---------------------------------------------------------------------------
@@ -232,6 +285,15 @@ class GeneticSearch(SearchStrategy):
     Selection still only ever picks a *measured* pattern — predicted
     fitness steers evolution, never the final answer.  Without a cost
     model on the state, surrogate mode degrades to plain measured GA.
+
+    Verification pipelining: the plain GA proposes each generation as one
+    *batch* (arXiv 2004.08548 verifies a whole population in parallel on
+    the verification environment), so all fresh genomes AOT-compile
+    concurrently before the strictly-serial timing pass.  Surrogate mode
+    proposes serially (each measurement feeds the model that decides the
+    next) but hints ``ledger.prefetch`` with the predicted top-``2*topk``
+    each generation — the speculative compile-ahead usually has the next
+    proposal's executable warm by the time it is asked for.
     """
     name = "genetic"
 
@@ -307,6 +369,7 @@ class GeneticSearch(SearchStrategy):
             impls = [to_impl(g) for g in pop]
             obs_before = len(model.history) if model is not None else 0
             topset: set[int] = set()
+            died = False
             if model is not None:
                 # predicted fitness for the WHOLE population, ties broken by
                 # pattern string so the trajectory stays deterministic
@@ -314,49 +377,68 @@ class GeneticSearch(SearchStrategy):
                                key=lambda i: (model.predict(impls[i]),
                                               impls[i].describe()))
                 topset = set(order[:self.topk])
-            for i, g in enumerate(pop):
-                impl = impls[i]
-                predicted = (state.cost_model.predict(impl)
-                             if state.cost_model is not None else None)
-                entry = {"pattern": impl.describe(), "predicted": predicted,
-                         "measured": None, "source": "model"}
-                if model is None:
-                    # plain measured GA: every genome costs (ledger hits free)
-                    m = yield impl
+                # speculative compile-ahead: the predicted top-2k are the
+                # genomes most likely to be proposed (this generation's
+                # top-k now; elites and near-winners next generation) —
+                # warm their compiles while earlier proposals are timed
+                ledger.prefetch([impls[i] for i in order[:2 * self.topk]])
+            if model is None:
+                # plain measured GA: the whole generation is ONE batch —
+                # all fresh genomes compile concurrently, ledger hits
+                # (elites, duplicate offspring) are served free, and the
+                # timed measurements keep population order
+                results = yield impls
+                for g, impl, m in zip(pop, impls, results):
+                    predicted = (state.cost_model.predict(impl)
+                                 if state.cost_model is not None else None)
+                    entry = {"pattern": impl.describe(),
+                             "predicted": predicted,
+                             "measured": None, "source": "measured"}
+                    if m is None:        # budget died mid-generation
+                        died = True
+                        continue
                     t["patterns"].append(impl.describe())
                     entry["measured"] = m.run_seconds if m.ok else None
-                    entry["source"] = "measured"
                     t["genomes"].append(entry)
                     scored.append((m.run_seconds if m.ok else float("inf"), g))
-                    continue
-                # surrogate: spend real measurements only where it matters
-                free = ledger.seen(impl)
-                worthwhile = (generation == 0 or free
-                              or predicted < best_measured)
-                affordable = free or (real_spent < real_cap
-                                      and not ledger.exhausted())
-                if (free or i in topset) and worthwhile and affordable:
-                    if not free:
-                        real_spent += 1
-                    m = yield impl
-                    t["patterns"].append(impl.describe())
-                    if m.ok:
-                        model.observe(impl, m.run_seconds)
-                        best_measured = min(best_measured, m.run_seconds)
-                        entry["measured"] = m.run_seconds
-                    entry["source"] = "ledger" if free else "measured"
-                    t["genomes"].append(entry)
-                    scored.append((m.run_seconds if m.ok else float("inf"), g))
-                else:
-                    t["genomes"].append(entry)
-                    scored.append((predicted, g))
+            else:
+                for i, g in enumerate(pop):
+                    impl = impls[i]
+                    predicted = (state.cost_model.predict(impl)
+                                 if state.cost_model is not None else None)
+                    entry = {"pattern": impl.describe(),
+                             "predicted": predicted,
+                             "measured": None, "source": "model"}
+                    # surrogate: spend real measurements only where it matters
+                    free = ledger.seen(impl)
+                    worthwhile = (generation == 0 or free
+                                  or predicted < best_measured)
+                    affordable = free or (real_spent < real_cap
+                                          and not ledger.exhausted())
+                    if (free or i in topset) and worthwhile and affordable:
+                        if not free:
+                            real_spent += 1
+                        m = yield impl
+                        t["patterns"].append(impl.describe())
+                        if m.ok:
+                            model.observe(impl, m.run_seconds)
+                            best_measured = min(best_measured, m.run_seconds)
+                            entry["measured"] = m.run_seconds
+                        entry["source"] = "ledger" if free else "measured"
+                        t["genomes"].append(entry)
+                        scored.append(
+                            (m.run_seconds if m.ok else float("inf"), g))
+                    else:
+                        t["genomes"].append(entry)
+                        scored.append((predicted, g))
             t["budget_left"] = ledger.budget
             if model is not None:
                 t["real_measurements"] = real_spent
                 n_obs = len(model.history) - obs_before
                 t["model_error"] = (model.mean_abs_rel_error(last=n_obs)
                                     if n_obs else None)
-            if generation + 1 >= self.generations or ledger.exhausted():
+            if died or generation + 1 >= self.generations \
+                    or ledger.exhausted():
                 return
             if model is not None and real_spent >= real_cap:
                 # the measurement allowance is gone: further generations can
@@ -388,7 +470,10 @@ class GeneticSearch(SearchStrategy):
 class ExhaustiveSearch(SearchStrategy):
     """Every genome in the space, deterministic order — the parity oracle
     for tiny spaces (and the paper's 'measure everything' degenerate case
-    when ``d`` covers the whole space)."""
+    when ``d`` covers the whole space).  Proposals go out in budget-sized
+    *batches* so the verification executor can compile a whole chunk
+    concurrently; enumeration (and skip logging) still stops at the
+    unaffordable tail, exactly like the serial walk."""
     name = "exhaustive"
 
     def proposals(self, state: SearchState, ledger: MeasurementLedger):
@@ -398,8 +483,19 @@ class ExhaustiveSearch(SearchStrategy):
         allele_lists = [["ref"] + [c.variant for c in state.variants_of(r)]
                         for r in regions]
         t = state.begin_stage("exhaustive enumeration")
+
+        pending: list[Impl] = []
+
+        def flush(pending):
+            results = yield pending
+            for impl, m in zip(pending, results):
+                if m is None:
+                    return True           # budget died mid-chunk
+                t["patterns"].append(impl.describe())
+            return False
+
         for combo in itertools.product(*allele_lists):
-            if ledger.exhausted():
+            if ledger.exhausted() and not pending:
                 return       # don't walk (or log skips for) the unaffordable tail
             impl = Impl({r: v for r, v in zip(regions, combo) if v != "ref"})
             if not impl:
@@ -407,8 +503,14 @@ class ExhaustiveSearch(SearchStrategy):
             if state.impl_fraction(impl) > state.resource_cap:
                 state.skipped.append(impl.describe())
                 continue
-            yield impl
-            t["patterns"].append(impl.describe())
+            pending.append(impl)
+            if len(pending) >= max(ledger.budget, 1):
+                died = yield from flush(pending)
+                if died:
+                    return
+                pending = []
+        if pending:
+            yield from flush(pending)
 
 
 # ---------------------------------------------------------------------------

@@ -31,15 +31,17 @@ from repro.serving.sampling import SamplingParams
 
 
 def planned_impl(arch: str, cache: PlanCache, reps: int = 2,
-                 strategy: str = "staged", seed: int = 0) -> Impl:
+                 strategy: str = "staged", seed: int = 0,
+                 verify_workers: int = 1) -> Impl:
     """Best cached/measured offload pattern for the arch's block regions,
     merged over the architectural defaults."""
     from repro.core.planner import AutoOffloader, PlannerConfig
     from repro.models.offload_program import make_lm_program
 
     prog = make_lm_program(arch)
-    report = AutoOffloader(PlannerConfig(reps=reps, strategy=strategy,
-                                         seed=seed)).plan(prog, cache=cache)
+    report = AutoOffloader(PlannerConfig(
+        reps=reps, strategy=strategy, seed=seed,
+        verify_workers=verify_workers)).plan(prog, cache=cache)
     src = ("plan cache" if report.from_cache
            else f"measured search [{report.strategy}]")
     print(f"auto-offload [{src}]: {report.best_pattern or 'all-ref'} "
@@ -76,6 +78,12 @@ def main() -> None:
                     help="strategy RNG seed for --auto-offload; kept "
                          "separate from --seed (sampling) so varying the "
                          "sampling seed never re-keys the plan cache")
+    ap.add_argument("--verify-workers", type=int, default=1,
+                    help="concurrent AOT-compile threads for the planner's "
+                         "pattern verification (core/executor.py); the "
+                         "selected pattern is identical at any width — "
+                         "raise it on hosts with spare cores to cut "
+                         "plan-time wall-clock")
     ap.add_argument("--plan-cache",
                     default=os.environ.get(DEFAULT_CACHE_ENV,
                                            DEFAULT_CACHE_PATH),
@@ -90,7 +98,8 @@ def main() -> None:
     if args.auto_offload:
         impl = planned_impl(args.arch, PlanCache(args.plan_cache),
                             strategy=args.offload_strategy,
-                            seed=args.offload_seed)
+                            seed=args.offload_seed,
+                            verify_workers=args.verify_workers)
     key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
     ctx = args.prompt_len + args.new_tokens + cfg.n_front

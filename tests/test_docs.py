@@ -22,7 +22,11 @@ DOCUMENTED = {
                               "make_strategy", "STRATEGY_NAMES",
                               "AUTO_STAGED_MAX_SPACE"],
     "repro.core.search": ["Measurement", "MeasurementLedger",
-                          "time_callable", "impl_key"],
+                          "time_callable", "impl_key", "aot_compile",
+                          "aot_lower", "finish_compile",
+                          "CompiledArtifact"],
+    "repro.core.executor": ["VerificationExecutor", "CompileCache",
+                            "VerifyJob", "compile_key", "ExecutorStats"],
     "repro.core.cost_model": ["CostModel", "HOST_SHARE"],
     "repro.core.plan_cache": ["PlanCache", "plan_cache_key",
                               "measurement_cache_key", "resolve_cache"],

@@ -1,0 +1,550 @@
+"""Pipelined pattern verification (core/executor.py + the batched ledger).
+
+Covers the ISSUE-5 tentpole: executor determinism (same winner /
+measurements / trace at any ``verify_workers``), timing isolation (the
+compile barrier — no timed rep overlaps a compile), MeasurementLedger
+thread-safety and batch semantics, CompileCache dedup within a run and
+across the re-plan path, speculative compile-ahead, the ``time_callable``
+failure-path compile accounting (satellite bugfix), and the CostModel
+residual-bias notes (satellite)."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search
+from repro.core.cost_model import CostModel
+from repro.core.executor import (CompileCache, VerificationExecutor,
+                                 VerifyJob, compile_key)
+from repro.core.plan_cache import PlanCache
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, register_variant, variants
+from repro.core.search import (CompiledArtifact, Measurement,
+                               MeasurementLedger, impl_key)
+from repro.core.strategies import SearchCandidate
+
+_counter = [0]
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 400, body, x)
+
+
+def _toy_program(n_variants_a: int = 2):
+    """Two-region toy (same shape as test_strategies)."""
+    tag = f"exec_{_counter[0]}"
+    _counter[0] += 1
+    a, b = f"{tag}_a", f"{tag}_b"
+    register_variant(a, "ref")(_slow_ref)
+    register_variant(a, "offload")(lambda x: x * 1.0000001)
+    if n_variants_a > 1:
+        register_variant(a, "fast")(lambda x: x + 1e-7)
+    register_variant(b, "ref")(_slow_ref)
+    register_variant(b, "offload")(lambda x: x - 1e-7)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    regions = [Region(a, variants(a)["ref"], abstract),
+               Region(b, variants(b)["ref"], abstract)]
+    prog = OffloadableProgram(
+        name=f"exec_toy_{tag}", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=2)
+    return prog, a, b
+
+
+def _fake_measurement_path(monkeypatch, rename: dict | None = None):
+    """Deterministic stand-ins for BOTH halves of the measurement path:
+    lowering/compiling is logged (and produces a dummy artifact), and
+    run_seconds is a pure function of the NORMALIZED pattern string
+    (``rename`` maps the per-program region tags to stable names), so
+    trajectories are bit-reproducible across programs and worker counts."""
+    log = {"compiles": [], "timed": []}
+    lock = threading.Lock()
+    rename = rename or {}
+
+    def fake_lower(fn, args, **kw):
+        return ("lowered", 0.0, "")
+
+    def fake_finish(lowered, lower_seconds=0.0, error=""):
+        with lock:
+            log["compiles"].append(lowered)
+        return CompiledArtifact(compiled=lambda *a: None,
+                                compile_seconds=0.01)
+
+    def fake_time(fn, args, *, warmup=1, reps=5, pattern="", impl=None,
+                  precompiled=None, **kw):
+        with lock:
+            log["timed"].append(pattern)
+        canon = pattern
+        for old, new in rename.items():
+            canon = canon.replace(old, new)
+        if pattern == "all-ref":
+            secs = 1.0
+        else:
+            secs = 0.1 + (sum(ord(c) for c in canon) % 97) / 1000.0
+        return Measurement(pattern, 0.01, secs, [secs] * max(reps, 1),
+                           impl=dict(impl) if impl is not None else None)
+
+    monkeypatch.setattr(search, "aot_lower", fake_lower)
+    monkeypatch.setattr(search, "finish_compile", fake_finish)
+    monkeypatch.setattr(search, "time_callable", fake_time)
+    return log
+
+
+def _normalize(trace, a, b):
+    """Strategy trace minus the executor/bias accounting entries, region
+    names canonicalized — the worker-count-invariant part."""
+    out = []
+    for t in trace:
+        if "workers" in t or "pairs" in t:
+            continue
+        out.append({
+            "stage": t.get("stage"),
+            "patterns": [p.replace(a, "A").replace(b, "B")
+                         for p in t.get("patterns", [])],
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# time_callable failure accounting (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_time_callable_accounts_compile_on_run_failure():
+    """A pattern whose compile succeeds but whose RUN fails must still
+    report its true compile cost (previously 0.0)."""
+    def boom():
+        raise RuntimeError("runtime only")
+
+    def fn(x):
+        y = jax.pure_callback(lambda v: np.asarray(boom()),
+                              jax.ShapeDtypeStruct((), jnp.float32), x)
+        return x.sum() + y
+
+    m = search.time_callable(fn, (jnp.ones((8, 8), jnp.float32),),
+                             warmup=0, reps=1, pattern="p", impl={})
+    assert not m.ok
+    assert m.run_seconds == float("inf")
+    assert m.compile_seconds > 0.0        # the compile DID happen and cost time
+
+
+def test_time_callable_accounts_compile_on_compile_failure():
+    def bad(x):
+        raise ValueError("no trace for you")
+
+    m = search.time_callable(bad, (jnp.ones((4,), jnp.float32),),
+                             warmup=0, reps=1, pattern="p", impl={})
+    assert not m.ok and m.compile_seconds > 0.0
+    assert "ValueError" in m.error
+
+
+def test_time_callable_accepts_precompiled_artifact():
+    fn = lambda x: (x @ x).sum()                              # noqa: E731
+    args = (jnp.ones((16, 16), jnp.float32),)
+    art = search.aot_compile(fn, args)
+    assert art.ok and art.compile_seconds > 0.0
+    m = search.time_callable(fn, args, warmup=0, reps=2, pattern="p",
+                             impl={}, precompiled=art)
+    assert m.ok
+    assert m.compile_seconds == art.compile_seconds
+    assert len(m.runs) == 2
+
+
+# ---------------------------------------------------------------------------
+# Executor determinism: verify_workers must never change the answer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["staged", "genetic", "surrogate",
+                                      "exhaustive"])
+def test_same_winner_measurements_trace_at_any_worker_count(
+        monkeypatch, strategy):
+    """Acceptance: verify_workers=1 vs 4 — identical selected Impl,
+    identical measured sequence, identical strategy trace."""
+    outcomes = []
+    for workers in (1, 4):
+        prog, a, b = _toy_program()
+        _fake_measurement_path(monkeypatch, rename={a: "A", b: "B"})
+        cfg = PlannerConfig(max_measurements=6, reps=1, warmup=0,
+                            strategy=strategy, seed=3,
+                            verify_workers=workers)
+        rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+        outcomes.append({
+            "winner": {k.replace(a, "A").replace(b, "B"): v
+                       for k, v in rep.best_pattern.items()},
+            "measured": [m.pattern.replace(a, "A").replace(b, "B")
+                         for m in rep.measurements],
+            "trace": _normalize(rep.search_trace, a, b),
+            "workers": rep.verify_workers,
+        })
+    assert outcomes[0]["winner"] == outcomes[1]["winner"]
+    assert outcomes[0]["measured"] == outcomes[1]["measured"]
+    assert outcomes[0]["trace"] == outcomes[1]["trace"]
+    assert (outcomes[0]["workers"], outcomes[1]["workers"]) == (1, 4)
+
+
+def test_real_compile_identical_winner_across_workers():
+    """No fakes: a real (tiny) exhaustive search selects the same pattern
+    and measured sequence serial vs pipelined."""
+    prog, a, b = _toy_program(n_variants_a=1)
+    reports = {}
+    for workers in (1, 2):
+        cfg = PlannerConfig(max_measurements=8, reps=1, warmup=0,
+                            strategy="exhaustive", verify_workers=workers)
+        reports[workers] = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    assert reports[1].best_pattern == reports[2].best_pattern
+    assert [m.pattern for m in reports[1].measurements] == \
+        [m.pattern for m in reports[2].measurements]
+    assert len(reports[2].measurements) == 3          # {a}, {b}, {a,b}
+    # wall accounting populated on both reports
+    for rep in reports.values():
+        assert rep.verify_wall_s > 0.0
+        assert rep.search_trace[-1]["stage"] == "verification executor"
+
+
+def test_timing_isolation_no_rep_overlaps_a_compile(monkeypatch):
+    """The compile BARRIER: in a pipelined batch, every compile finishes
+    before the first timed rep starts — run_seconds medians are never taken
+    while another pattern is compiling."""
+    events = []
+    lock = threading.Lock()
+
+    def fake_lower(fn, args, **kw):
+        return ("lowered", 0.0, "")
+
+    def fake_finish(lowered, lower_seconds=0.0, error=""):
+        with lock:
+            events.append(("compile_start",))
+        time.sleep(0.02)
+        with lock:
+            events.append(("compile_end",))
+        return CompiledArtifact(lambda *a: None, 0.02)
+
+    def fake_time(fn, args, *, pattern="", impl=None, **kw):
+        with lock:
+            events.append(("timed", pattern))
+        return Measurement(pattern, 0.02, 0.1, [0.1],
+                           impl=dict(impl) if impl is not None else None)
+
+    monkeypatch.setattr(search, "aot_lower", fake_lower)
+    monkeypatch.setattr(search, "finish_compile", fake_finish)
+    monkeypatch.setattr(search, "time_callable", fake_time)
+
+    ex = VerificationExecutor(workers=4)
+    jobs = [VerifyJob(key=("p", (("r", f"v{i}"),), ()), fn=None, args=(),
+                      pattern=f"r=v{i}", impl={"r": f"v{i}"})
+            for i in range(6)]
+    ms = ex.measure_batch(jobs, warmup=0, reps=1)
+    ex.shutdown()
+    assert len(ms) == 6
+    first_timed = next(i for i, e in enumerate(events) if e[0] == "timed")
+    assert sum(1 for e in events[:first_timed] if e[0] == "compile_end") == 6
+    # blocked-compile wall < sum of true compile durations (they overlapped)
+    assert ex.stats.compile_wall_s < 6 * 0.02
+
+
+# ---------------------------------------------------------------------------
+# MeasurementLedger: batch semantics + thread safety
+# ---------------------------------------------------------------------------
+def _mk(impl):
+    return Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                       impl=dict(impl))
+
+
+def test_ledger_batch_budget_dedup_and_hits():
+    ledger = MeasurementLedger(_mk, budget=2)
+    ledger.prime(Impl({"c": "offload"}), _mk({"c": "offload"}))
+    out = ledger.measure_batch([
+        Impl({"a": "offload"}),           # miss 1
+        Impl({"c": "offload"}),           # primed hit, free
+        Impl({"a": "offload"}),           # in-batch duplicate -> hit
+        Impl({"b": "offload"}),           # miss 2 (budget now 0)
+        Impl({"d": "offload"}),           # unaffordable -> None
+    ])
+    assert [m.pattern if m else None for m in out] == \
+        ["a=offload", "c=offload", "a=offload", "b=offload", None]
+    assert out[0] is out[2]
+    assert ledger.misses == 2 and ledger.hits == 2
+    assert ledger.budget == 0 and ledger.exhausted()
+    assert [m.pattern for m in ledger.order] == ["a=offload", "b=offload"]
+    # served: distinct patterns in first-served (batch) order
+    assert [m.pattern for m in ledger.served] == \
+        ["a=offload", "c=offload", "b=offload"]
+    # hits are still served after exhaustion
+    again = ledger.measure_batch([Impl({"a": "offload"})])
+    assert again[0] is out[0]
+
+
+def test_ledger_batch_routes_misses_through_batch_fn():
+    batches = []
+
+    def batch_fn(impls):
+        batches.append([Impl(i).describe() for i in impls])
+        return [_mk(i) for i in impls]
+
+    ledger = MeasurementLedger(
+        lambda impl: pytest.fail("singles path must not be used"),
+        budget=5, measure_batch_fn=batch_fn)
+    ledger.prime(Impl({"z": "offload"}), _mk({"z": "offload"}))
+    ledger.measure_batch([Impl({"a": "offload"}), Impl({"z": "offload"}),
+                          Impl({"b": "offload"})])
+    # only the ledger-missing subset reaches the (concurrent) batch fn
+    assert batches == [["a=offload", "b=offload"]]
+
+
+def test_ledger_prefetch_forwards_only_unseen():
+    hints = []
+    ledger = MeasurementLedger(_mk, budget=5,
+                               prefetch_fn=lambda impls: hints.extend(impls))
+    ledger.prime(Impl({"a": "offload"}), _mk({"a": "offload"}))
+    ledger.prefetch([Impl({"a": "offload"}), Impl({"b": "offload"})])
+    assert [Impl(i).describe() for i in hints] == ["b=offload"]
+    assert ledger.budget == 5 and ledger.order == []   # free, no spend
+
+
+def test_ledger_thread_safety_under_concurrent_measurement():
+    """Satellite: concurrent measure() calls racing on overlapping patterns
+    never double-measure, never double-bill, and keep accounting exact."""
+    n_unique = 6
+    calls = []
+    lock = threading.Lock()
+
+    def measure(impl):
+        with lock:
+            calls.append(impl_key(impl))
+        time.sleep(0.005)                  # widen the race window
+        return _mk(impl)
+
+    ledger = MeasurementLedger(measure, budget=100)
+    impls = [Impl({f"r{i}": "offload"}) for i in range(n_unique)]
+    results = []
+
+    def worker(seed):
+        rotated = impls[seed % n_unique:] + impls[:seed % n_unique]
+        for impl in rotated:
+            m = ledger.measure(impl)
+            results.append(m)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == n_unique          # each pattern measured ONCE
+    assert len(set(calls)) == n_unique
+    assert ledger.misses == n_unique
+    assert ledger.budget == 100 - n_unique
+    assert ledger.hits == 8 * n_unique - n_unique
+    assert len(ledger.order) == n_unique
+    assert len(ledger.served) == n_unique
+    assert all(m is not None for m in results)
+
+
+# ---------------------------------------------------------------------------
+# CompileCache: dedup within a run and across the re-plan path
+# ---------------------------------------------------------------------------
+def test_compile_cache_dedupes_within_executor():
+    cache = CompileCache()
+    compiled = []
+
+    def fake_lower(fn, args):
+        return ("lowered", 0.0, "")
+
+    ex = VerificationExecutor(workers=2, cache=cache)
+    job = VerifyJob(key=("p", (("r", "v"),), ("f32[4]",)),
+                    fn=lambda x: x, args=(jnp.ones(4),), pattern="r=v",
+                    impl={"r": "v"})
+    import unittest.mock as mock
+    with mock.patch.object(search, "aot_lower", side_effect=fake_lower), \
+         mock.patch.object(search, "finish_compile",
+                           side_effect=lambda *a, **k: (
+                               compiled.append(1),
+                               CompiledArtifact(lambda *x: None, 0.01))[1]), \
+         mock.patch.object(search, "time_callable",
+                           side_effect=lambda *a, **k: _mk({"r": "v"})):
+        ex.measure_batch([job], warmup=0, reps=1)
+        ex.measure_batch([job], warmup=0, reps=1)   # same key: cache hit
+    ex.shutdown()
+    assert len(compiled) == 1
+    assert cache.hits == 1 and cache.misses == 1
+
+
+def test_compile_cache_warm_on_replan_same_offloader(monkeypatch):
+    """The cache-primed re-plan path: a second plan of the same program on
+    the same AutoOffloader re-verifies through warm executables — zero new
+    compiles."""
+    log = _fake_measurement_path(monkeypatch)
+    prog, a, b = _toy_program(n_variants_a=1)
+    cfg = PlannerConfig(max_measurements=8, reps=1, warmup=0,
+                        strategy="exhaustive", verify_workers=2)
+    off = AutoOffloader(cfg)
+    r1 = off.plan(prog, jax.random.PRNGKey(0))
+    n_compiles_first = len(log["compiles"])
+    assert n_compiles_first >= len(r1.measurements)
+    r2 = off.plan(prog, jax.random.PRNGKey(0))
+    assert len(log["compiles"]) == n_compiles_first   # all warm: no recompile
+    assert r2.best_pattern == r1.best_pattern
+    stats = r2.search_trace[-1]
+    assert stats["stage"] == "verification executor"
+    assert stats["compile_cache_hits"] >= len(r2.measurements)
+
+
+def test_prefetch_speculative_compile_ahead(monkeypatch):
+    """Surrogate mode hints its predicted top-2k; with workers > 1 the
+    executor starts those compiles before the patterns are proposed."""
+    _fake_measurement_path(monkeypatch)
+    prog, a, b = _toy_program()
+    cfg = PlannerConfig(max_measurements=6, reps=1, warmup=0,
+                        strategy="surrogate", seed=2, verify_workers=2)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    stats = rep.search_trace[-1]
+    assert stats["stage"] == "verification executor"
+    assert stats["prefetched"] >= 1
+    assert stats["workers"] == 2
+
+
+def test_prefetch_is_a_noop_in_serial_mode(monkeypatch):
+    _fake_measurement_path(monkeypatch)
+    prog, a, b = _toy_program()
+    cfg = PlannerConfig(max_measurements=6, reps=1, warmup=0,
+                        strategy="surrogate", seed=2, verify_workers=1)
+    rep = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0))
+    stats = rep.search_trace[-1]
+    assert stats["prefetched"] == 0 and stats["workers"] == 1
+
+
+def test_verify_workers_in_plan_cache_key():
+    from repro.core.plan_cache import plan_cache_key
+    prog, _, _ = _toy_program(n_variants_a=1)
+    assert plan_cache_key(prog, PlannerConfig(verify_workers=1)) != \
+        plan_cache_key(prog, PlannerConfig(verify_workers=4))
+
+
+# ---------------------------------------------------------------------------
+# CostModel residual-bias notes (satellite)
+# ---------------------------------------------------------------------------
+def _cand(region, variant):
+    return SearchCandidate(region, variant, 0.1, 1.0, flops=1e9,
+                           boundary_bytes=1e6, alignment=1.0)
+
+
+def test_bias_notes_flag_persistent_interaction():
+    """Single-gene observations keep re-pinning the genes; the combined
+    pattern keeps measuring slower than additive -> under-predicted pair."""
+    model = CostModel(candidates=[_cand("a", "offload"),
+                                  _cand("b", "offload")],
+                      baseline_seconds=1.0)
+    model.observe(Impl(), 1.0)
+    for _ in range(3):
+        model.observe(Impl({"a": "offload"}), 0.7)
+        model.observe(Impl({"b": "offload"}), 0.75)
+        # additive would be 1.0 - 0.3 - 0.25 = 0.45; interaction adds 0.1
+        model.observe(Impl({"a": "offload", "b": "offload"}), 0.55)
+    notes = model.bias_notes()
+    assert len(notes) == 1
+    note = notes[0]
+    assert note["pair"] == [["a", "offload"], ["b", "offload"]]
+    assert note["sign"] == "under-predicted"
+    assert note["observations"] >= 3
+    assert note["mean_rel_residual"] > 0
+
+
+def test_bias_notes_ignore_alternating_and_tiny_residuals():
+    model = CostModel(candidates=[_cand("a", "offload"),
+                                  _cand("b", "offload")],
+                      baseline_seconds=1.0)
+    model.observe(Impl(), 1.0)
+    for i in range(6):
+        model.observe(Impl({"a": "offload"}), 0.7)
+        model.observe(Impl({"b": "offload"}), 0.75)
+        bump = 0.05 if i % 2 == 0 else -0.05      # alternating sign
+        model.observe(Impl({"a": "offload", "b": "offload"}), 0.45 + bump)
+    assert model.bias_notes() == []
+    # consistent but sub-deadband residuals never accumulate into a note
+    model2 = CostModel(candidates=[_cand("a", "offload"),
+                                   _cand("b", "offload")],
+                       baseline_seconds=1.0)
+    model2.observe(Impl(), 1.0)
+    for _ in range(4):
+        model2.observe(Impl({"a": "offload"}), 0.7)
+        model2.observe(Impl({"b": "offload"}), 0.75)
+        model2.observe(Impl({"a": "offload", "b": "offload"}), 0.4505)
+    assert model2.bias_notes() == []
+
+
+def test_bias_notes_surface_in_plan_report(monkeypatch, tmp_path):
+    """End to end: a 4-region superadditive program is measured once
+    (exhaustive, persisted), then a re-opened search pre-calibrates from
+    the primed measurements — the same-sign multi-gene residuals put the
+    pair-bias entry on the re-plan's search_trace."""
+    tag = f"bias_{_counter[0]}"
+    _counter[0] += 1
+    names = [f"{tag}_{c}" for c in "abcd"]
+    for n in names:
+        register_variant(n, "ref")(_slow_ref)
+        register_variant(n, "offload")(lambda x: x * 1.0000001)
+
+    def build(impl):
+        def run(x):
+            for n in names:
+                x = dispatch(n, impl, x)
+            return x
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((64, 64), jnp.float32),)
+    prog = OffloadableProgram(
+        name=f"bias_toy_{tag}",
+        regions=[Region(n, variants(n)["ref"], abstract) for n in names],
+        build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (64, 64)),),
+        source_loop_count=4)
+
+    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None, **kw):
+        genes = [g for g, v in (impl or {}).items() if v != "ref"]
+        secs = 1.0 - 0.2 * len(genes)
+        n_pairs = len(genes) * (len(genes) - 1) // 2
+        secs += 0.06 * n_pairs            # superadditive interaction
+        if pattern == "all-ref":
+            secs = 1.0
+        return Measurement(pattern, 0.01, secs, [secs] * max(reps, 1),
+                           impl=dict(impl) if impl is not None else None)
+
+    monkeypatch.setattr(search, "time_callable", fake)
+    cache = PlanCache(tmp_path / "plans.json")
+    cfg = PlannerConfig(max_measurements=15, reps=1, warmup=0, top_a=5,
+                        top_c=4, strategy="exhaustive")
+    r1 = AutoOffloader(cfg).plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert len(r1.measurements) == 15                 # the whole 2^4-1 space
+    # re-opened search (changed budget): priming replays every multi-gene
+    # measurement through CostModel.observe -> persistent positive residuals
+    cfg2 = PlannerConfig(max_measurements=14, reps=1, warmup=0, top_a=5,
+                         top_c=4, strategy="exhaustive")
+    r2 = AutoOffloader(cfg2).plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert r2.measurements == []                      # fully primed
+    bias_entries = [t for t in r2.search_trace if "pairs" in t]
+    assert bias_entries, "pair-bias notes must surface on search_trace"
+    pairs = bias_entries[0]["pairs"]
+    assert all(p["sign"] == "under-predicted" for p in pairs)
+    assert any(p["observations"] >= 3 for p in pairs)
+    # and the summary renders them without blowing up
+    assert "under-predicted" in r2.summary()
+
+
+def test_compile_key_distinguishes_program_pattern_and_shapes():
+    args64 = (jax.ShapeDtypeStruct((64,), jnp.float32),)
+    args128 = (jax.ShapeDtypeStruct((128,), jnp.float32),)
+    k = compile_key("p", Impl({"r": "v"}), args64)
+    assert k != compile_key("q", Impl({"r": "v"}), args64)
+    assert k != compile_key("p", Impl({"r": "w"}), args64)
+    assert k != compile_key("p", Impl({"r": "v"}), args128)
+    # ref genes never change the identity
+    assert k == compile_key("p", Impl({"r": "v", "s": "ref"}), args64)

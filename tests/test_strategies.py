@@ -63,7 +63,7 @@ def _fake_time_callable(monkeypatch):
     (GA determinism must not depend on wall-clock noise)."""
     calls = []
 
-    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None):
+    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None, **kw):
         calls.append(pattern)
         if pattern == "all-ref":
             secs = 1.0

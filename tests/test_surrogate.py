@@ -67,7 +67,7 @@ def _additive_time(true_delta, base=1.0):
     """Deterministic measurement stand-in: run_seconds is exactly additive
     over the pattern's genes — a *consistent* linear system, so Kaczmarz
     calibration must converge and prediction error must not increase."""
-    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None):
+    def fake(fn, args, *, warmup=1, reps=5, pattern="", impl=None, **kw):
         secs = base
         for r, v in (impl or {}).items():
             if v != "ref":

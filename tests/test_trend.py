@@ -1,0 +1,118 @@
+"""benchmarks/trend.py rolling-window gate: snapshot discovery (flat,
+per-run, and gh-run-download nested layouts), median-of-window gating, and
+the damping of single-sample shared-runner noise the window exists for."""
+import json
+
+from benchmarks import trend
+
+
+def _doc(best_ms, speedup=2.0, section="strategies"):
+    return {"section": section,
+            "rows": [{"app": "tdfir", "strategy": "staged",
+                      "best_ms": best_ms, "speedup": speedup}]}
+
+
+def _write(path, doc):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc))
+
+
+def _history_dir(tmp_path, best_ms_values):
+    base = tmp_path / "bench-baseline"
+    for i, v in enumerate(best_ms_values):
+        # the gh-run-download layout: <run-id>/<artifact-name>/BENCH_*.json
+        _write(base / str(1000 + i) / f"bench-sha{i}" /
+               "BENCH_strategies.json", _doc(v))
+    return base
+
+
+def test_load_history_flat_single_dir_is_one_snapshot(tmp_path):
+    _write(tmp_path / "prev" / "BENCH_strategies.json", _doc(10.0))
+    history = trend.load_history(str(tmp_path / "prev"))
+    assert len(history) == 1
+    assert history[0]["strategies"]["rows"][0]["best_ms"] == 10.0
+
+
+def test_load_history_per_run_subdirs_nested_artifacts(tmp_path):
+    base = _history_dir(tmp_path, [10.0, 11.0, 12.0])
+    history = trend.load_history(str(base))
+    assert [s["strategies"]["rows"][0]["best_ms"] for s in history] == \
+        [10.0, 11.0, 12.0]
+
+
+def test_load_history_window_keeps_newest_runs(tmp_path):
+    base = _history_dir(tmp_path, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0])
+    history = trend.load_history(str(base), window=5)
+    assert [s["strategies"]["rows"][0]["best_ms"] for s in history] == \
+        [3.0, 4.0, 5.0, 6.0, 7.0]
+
+
+def test_gate_compares_against_window_median(tmp_path, capsys):
+    # median of [10, 10, 10, 30, 10] is 10 -> current 13 regresses 30%
+    base = _history_dir(tmp_path, [10.0, 10.0, 10.0, 30.0, 10.0])
+    current = tmp_path / "current"
+    _write(current / "BENCH_strategies.json", _doc(13.0))
+    rc = trend.main(["--baseline", str(base), "--current", str(current)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "median-of-5 10.00 -> 13.00" in out
+
+
+def test_window_median_damps_single_noisy_baseline(tmp_path, capsys):
+    """The exact failure mode the window exists for: ONE noisy-fast
+    baseline sample (the old compare-to-previous would gate against 5.0
+    and flag +140%); the median keeps the gate honest."""
+    base = _history_dir(tmp_path, [12.0, 11.0, 12.5, 11.5, 5.0])
+    current = tmp_path / "current"
+    _write(current / "BENCH_strategies.json", _doc(12.0))
+    rc = trend.main(["--baseline", str(base), "--current", str(current)])
+    assert rc == 0
+    assert "no gated regressions" in capsys.readouterr().out
+
+
+def test_speedup_direction_higher_is_better(tmp_path):
+    base = _history_dir(tmp_path, [10.0, 10.0, 10.0])
+    current = tmp_path / "current"
+    _write(current / "BENCH_strategies.json", _doc(10.0, speedup=1.0))
+    rc = trend.main(["--baseline", str(base), "--current", str(current)])
+    assert rc == 1                        # speedup 2.0 -> 1.0 is -50%
+
+
+def test_no_baseline_exits_clean(tmp_path, capsys):
+    current = tmp_path / "current"
+    _write(current / "BENCH_strategies.json", _doc(10.0))
+    rc = trend.main(["--baseline", str(tmp_path / "missing"),
+                     "--current", str(current)])
+    assert rc == 0
+    assert "nothing to gate" in capsys.readouterr().out
+
+
+def test_verification_section_rows_keyed_and_not_wall_gated(tmp_path):
+    """verify_wall_s is report-only: a slower wall-clock (a busier runner)
+    must never fail the gate; rows are identified by app+workers+cached."""
+    def vdoc(wall):
+        return {"section": "verification",
+                "rows": [
+                    {"app": "veribench", "workers": 1,
+                     "verify_wall_s": wall, "best_ms": 1.0},
+                    {"app": "veribench", "workers": 4,
+                     "verify_wall_s": wall / 1.5, "best_ms": 1.0},
+                    {"app": "veribench", "workers": 4, "cached_replan": True,
+                     "verify_wall_s": wall / 20, "best_ms": 1.0},
+                ]}
+    base = tmp_path / "bench-baseline"
+    for i in range(3):
+        _write(base / str(i) / "BENCH_verification.json", vdoc(2.0))
+    current = tmp_path / "current"
+    _write(current / "BENCH_verification.json", vdoc(9.0))   # 4.5x slower wall
+    rc = trend.main(["--baseline", str(base), "--current", str(current)])
+    assert rc == 0
+
+
+def test_current_dir_does_not_swallow_baseline_snapshots(tmp_path):
+    """--current . next to bench-baseline/ must only read the flat files."""
+    _history_dir(tmp_path, [10.0])
+    _write(tmp_path / "BENCH_strategies.json", _doc(10.0))
+    docs = trend.load_docs(str(tmp_path))
+    assert list(docs) == ["strategies"]
+    assert docs["strategies"]["rows"][0]["best_ms"] == 10.0
