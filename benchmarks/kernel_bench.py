@@ -21,9 +21,9 @@ def _time(fn, args, reps=5):
     jax.block_until_ready(jitted(*args))
     ts = []
     for _ in range(reps):
-        t = time.time()
+        t = time.perf_counter()
         jax.block_until_ready(jitted(*args))
-        ts.append(time.time() - t)
+        ts.append(time.perf_counter() - t)
     return float(np.median(ts))
 
 

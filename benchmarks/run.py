@@ -2,6 +2,8 @@
 
   fig4          paper Fig. 4 (tdFIR / MRI-Q automatic-offload speedups)
   conditions    paper §5.1.2 evaluation-conditions table (loop narrowing)
+  extraction    static extractor precision/recall vs annotated archs +
+                discover()-driven auto-planning of unannotated programs
   strategies    staged vs genetic vs exhaustive Step-4 search at equal budget
   verification  serial vs pipelined pattern verification (core/executor.py)
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
@@ -23,8 +25,9 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "fig4", "conditions", "strategies",
-                             "verification", "kernels", "roofline"])
+                    choices=["all", "fig4", "conditions", "extraction",
+                             "strategies", "verification", "kernels",
+                             "roofline"])
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json next to the cwd for the "
                          "sections that support it")
@@ -40,6 +43,13 @@ def main() -> None:
         from benchmarks import loop_extraction
         loop_extraction.main(
             json_path="BENCH_conditions.json" if args.json else None)
+        print()
+    if args.section in ("all", "extraction"):
+        print("== static extraction (recognizer accuracy + unannotated "
+              "auto-plan) ==")
+        from benchmarks import loop_extraction
+        loop_extraction.main_extraction(
+            json_path="BENCH_extraction.json" if args.json else None)
         print()
     if args.section in ("all", "strategies"):
         print("== search strategies (staged vs genetic vs exhaustive) ==")

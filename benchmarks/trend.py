@@ -42,6 +42,7 @@ SECTION_KEYS = {
     "strategies": ("app", "strategy"),
     "conditions": ("app",),
     "verification": ("app", "workers", "cached_replan"),
+    "extraction": ("app",),
 }
 # metric -> direction: +1 higher is better, -1 lower is better, 0 report-only
 METRICS = {
@@ -54,6 +55,13 @@ METRICS = {
     "compile_ms_total": 0,
     "verify_wall_s": 0,
     "compile_wall_s": 0,
+    # extraction section: accuracy counts and plan_speedup are recorded for
+    # the trajectory but never gate (CPU-runner plan timings are too noisy)
+    "tp": 0,
+    "fp": 0,
+    "fn": 0,
+    "regions": 0,
+    "plan_speedup": 0,
 }
 DEFAULT_WINDOW = 5
 

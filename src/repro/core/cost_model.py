@@ -73,15 +73,35 @@ LAUNCH_OVERHEAD = 5e-6          # per-offloaded-region dispatch cost, seconds
 # ranking degenerates to the tie-break).
 HOST_SHARE = 0.9
 
-# Residual-bias detection for gene pairs (ROADMAP "region interaction
-# terms", first step: detect + surface, no correction yet).  A multi-gene
-# observation whose residual keeps the same sign BIAS_STREAK times in a row
-# for some gene pair marks that pair as non-additive — a combined pattern
-# changing fusion boundaries breaks the per-gene additivity the model
-# assumes.  Residuals within BIAS_REL_DEADBAND of the measured time count
-# as zero (plain timing noise must not accumulate into a "bias").
+# Residual-bias detection AND correction for gene pairs (ROADMAP "region
+# interaction terms").  A multi-gene observation whose residual keeps the
+# same sign BIAS_STREAK times in a row for some gene pair marks that pair
+# as non-additive — a combined pattern changing fusion boundaries breaks
+# the per-gene additivity the model assumes.  Residuals within
+# BIAS_REL_DEADBAND of the measured time count as zero (plain timing noise
+# must not accumulate into a "bias").  When a pair is flagged, the mean
+# residual of the flagging streak is folded into a sticky per-pair
+# correction term that ``predict`` adds whenever BOTH genes are in the
+# genome — single-gene predictions are untouched, so Kaczmarz gene pins
+# stay exact.  The fold is an integral controller: once the correction
+# absorbs the interaction, later residuals fall inside the deadband, the
+# streak breaks, and the accumulated term stops moving (no oscillation
+# between "flagged" and "forgotten").
 BIAS_STREAK = 3
 BIAS_REL_DEADBAND = 0.01
+
+
+def _trailing_streak(resid: list) -> int:
+    """Length of the trailing same-sign run (deadband residuals break it)."""
+    streak, sign = 0, 0
+    for r in reversed(resid):
+        s = (1 if r > BIAS_REL_DEADBAND
+             else -1 if r < -BIAS_REL_DEADBAND else 0)
+        if s == 0 or (sign and s != sign):
+            break
+        sign = s
+        streak += 1
+    return streak
 
 
 def _impl_genes(impl) -> tuple:
@@ -113,6 +133,12 @@ class CostModel:
     # (gene, gene) -> [relative residuals of the multi-gene observations
     # containing the pair, in observation order] — see bias_notes()
     _pair_resid: dict = field(default_factory=dict)
+    # (gene, gene) -> [this pair's share of the absolute residual, seconds]
+    # (aligned 1:1 with _pair_resid entries)
+    _pair_abs: dict = field(default_factory=dict)
+    # (gene, gene) -> accumulated interaction correction in seconds, added
+    # by predict() when both genes are present in the genome
+    _pair_corr: dict = field(default_factory=dict)
 
     def __post_init__(self):
         host = {}
@@ -150,10 +176,19 @@ class CostModel:
 
     # -- prediction ----------------------------------------------------
     def predict(self, impl) -> float:
-        """Predicted run seconds of a composite genome (never negative)."""
+        """Predicted run seconds of a composite genome (never negative).
+
+        Additive over genes, plus the learned pairwise interaction term for
+        every flagged gene pair present in the genome (see ``bias_notes``);
+        a genome with fewer than two non-ref genes never receives a pair
+        correction, so single-gene observations stay exactly pinned."""
         t = self._base
-        for g in _impl_genes(impl):
+        genes = _impl_genes(impl)
+        for g in genes:
             t += self._delta.get(g, 0.0)
+        if len(genes) >= 2 and self._pair_corr:
+            for pair in itertools.combinations(genes, 2):
+                t += self._pair_corr.get(pair, 0.0)
         return max(t, 1e-9)
 
     # -- online calibration --------------------------------------------
@@ -183,8 +218,20 @@ class CostModel:
             # so a pair whose residual keeps coming back with the same sign
             # is systematically non-additive (see bias_notes)
             rel = err / max(abs(measured_seconds), 1e-12)
-            for pair in itertools.combinations(genes, 2):
+            pairs = list(itertools.combinations(genes, 2))
+            for pair in pairs:
                 self._pair_resid.setdefault(pair, []).append(rel)
+                self._pair_abs.setdefault(pair, []).append(err / len(pairs))
+                streak = _trailing_streak(self._pair_resid[pair])
+                if streak >= BIAS_STREAK:
+                    # flagged: fold the streak's mean absolute residual into
+                    # the sticky pair correction.  Later single-gene pins
+                    # can't undo this (predict only applies it pairwise),
+                    # and once it converges the residuals drop into the
+                    # deadband and the streak stops extending.
+                    tail = self._pair_abs[pair][-streak:]
+                    self._pair_corr[pair] = (self._pair_corr.get(pair, 0.0)
+                                             + sum(tail) / len(tail))
         for g in genes:
             self._delta[g] = self._delta.get(g, 0.0) + err / len(genes)
 
@@ -199,23 +246,24 @@ class CostModel:
         in composite predictions is visible."""
         notes = []
         for pair, resid in sorted(self._pair_resid.items()):
-            streak, sign = 0, 0
-            for r in reversed(resid):
-                s = (1 if r > BIAS_REL_DEADBAND
-                     else -1 if r < -BIAS_REL_DEADBAND else 0)
-                if s == 0 or (sign and s != sign):
-                    break
-                sign = s
-                streak += 1
-            if streak >= BIAS_STREAK:
-                tail = resid[-streak:]
-                notes.append({
-                    "pair": [list(g) for g in pair],
-                    "sign": ("under-predicted" if sign > 0
-                             else "over-predicted"),
-                    "observations": streak,
-                    "mean_rel_residual": sum(tail) / streak,
-                })
+            streak = _trailing_streak(resid)
+            corr = self._pair_corr.get(pair, 0.0)
+            # a pair stays on the report while its correction is applied,
+            # even after the (now-corrected) residuals fall into the
+            # deadband and the live streak dies down
+            if streak < BIAS_STREAK and corr == 0.0:
+                continue
+            tail = resid[-streak:] if streak else []
+            sign = tail[-1] if tail else corr
+            notes.append({
+                "pair": [list(g) for g in pair],
+                "sign": "under-predicted" if sign > 0 else "over-predicted",
+                "observations": streak,
+                "mean_rel_residual": (sum(tail) / len(tail)) if tail else 0.0,
+                # the sticky interaction term predict() applies when both
+                # genes co-occur (0.0 until the first fold)
+                "corrected_seconds": corr,
+            })
         return notes
 
     # -- diagnostics ---------------------------------------------------

@@ -30,6 +30,10 @@ _ELEMENTWISE_1 = {
     "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor", "ceil",
     "round", "sign", "rem", "and", "or", "xor", "not", "select_n", "clamp",
     "add_any", "pow",
+    # comparisons and shifts retire one ALU op per element (integer
+    # arithmetic used to silently fall through and count zero)
+    "eq", "ne", "lt", "le", "ge", "gt",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
 }
 _TRANSCENDENTAL = {
     "exp", "log", "log1p", "expm1", "tanh", "sin", "cos", "tan", "rsqrt",
@@ -38,6 +42,19 @@ _TRANSCENDENTAL = {
 _REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
            "reduce_and", "reduce_or", "argmax", "argmin",
            "cumsum", "cumprod", "cummax", "cummin"}
+
+# explicitly zero-flop: data movement / layout / type bookkeeping.  These
+# retire no arithmetic, but classifying them (instead of silently falling
+# through) keeps `unclassified` an honest to-do list for ops the extractor
+# feeds through here.
+_ZERO_FLOP = {
+    "convert_element_type", "bitcast_convert_type", "reduce_precision",
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "expand_dims",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+    "rev", "gather", "scatter", "iota", "copy", "stop_gradient",
+    "real", "imag", "conj", "is_finite", "device_put", "split",
+    "optimization_barrier", "sharding_constraint",
+}
 
 
 def _aval_elems(aval) -> int:
@@ -57,6 +74,9 @@ class RegionAnalysis:
     loop_count: int = 0             # jaxpr loop statements (scan/while/fori)
     max_trip: float = 1.0
     alignment: float = 1.0          # layout penalty, applied at ranking time
+    # primitives the walker could not classify (name -> occurrences): any
+    # entry here means the flop count may be low for this region
+    unclassified: dict = field(default_factory=dict)
 
     @property
     def weighted_flops(self) -> float:
@@ -119,6 +139,10 @@ def _count_jaxpr(jaxpr, mult: float, acc: RegionAnalysis) -> None:
             if inner is not None:
                 _count_jaxpr(getattr(inner, "jaxpr", inner), mult, acc)
             continue
+        elif prim in _ZERO_FLOP:
+            continue                # data movement: explicitly zero flops
+        else:
+            acc.unclassified[prim] = acc.unclassified.get(prim, 0) + 1
     return
 
 

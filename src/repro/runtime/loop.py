@@ -84,10 +84,10 @@ def run_training(cfg: ModelConfig, pcfg: ParallelismConfig, mesh, data_iter,
         ewma = None
         for step in range(start_step, loop_cfg.total_steps):
             batch = next(data_iter)
-            t0 = time.time()
+            t0 = time.perf_counter()
             state, metrics = jitted(state, batch)
             loss = float(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             result.losses.append(loss)
             result.step_times.append(dt)
             if ewma is None:

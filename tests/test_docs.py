@@ -11,7 +11,8 @@ import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ROOT / "docs"
-PAGES = ("architecture.md", "search-strategies.md", "plan-cache.md")
+PAGES = ("architecture.md", "search-strategies.md", "plan-cache.md",
+         "loop-extraction.md")
 
 # the public surfaces the ISSUE-4 API pass documents: module -> symbols
 DOCUMENTED = {
@@ -33,6 +34,11 @@ DOCUMENTED = {
     "repro.core.regions": ["Impl", "register_variant", "dispatch",
                            "variants"],
     "repro.core.program": ["OffloadableProgram", "Region"],
+    "repro.core.extract": ["discover", "extract", "ExtractionReport",
+                           "RegionMatch", "CandidateSite", "enumerate_sites",
+                           "FAMILIES"],
+    "repro.core.intensity": ["RegionAnalysis", "analyze_region",
+                             "count_loops", "alignment_penalty"],
     "repro.serving.engine": ["ServeEngine"],
 }
 

@@ -539,6 +539,53 @@ def test_bias_notes_surface_in_plan_report(monkeypatch, tmp_path):
     assert "under-predicted" in r2.summary()
 
 
+def test_pair_correction_applies_to_composites_only():
+    """The flagged pair's residual feeds predict(): after the streak, the
+    composite prediction converges on the measured interaction — while
+    single-gene predictions stay exactly at their Kaczmarz pins."""
+    model = CostModel(candidates=[_cand("a", "offload"),
+                                  _cand("b", "offload")],
+                      baseline_seconds=1.0)
+    model.observe(Impl(), 1.0)
+    for _ in range(4):
+        model.observe(Impl({"a": "offload"}), 0.7)
+        model.observe(Impl({"b": "offload"}), 0.75)
+        # additive says 0.45; the measured composite carries +0.1 interaction
+        model.observe(Impl({"a": "offload", "b": "offload"}), 0.55)
+    # re-pin the single genes one last time (the correction must survive)
+    model.observe(Impl({"a": "offload"}), 0.7)
+    model.observe(Impl({"b": "offload"}), 0.75)
+    # guard: single-gene predictions are exactly the pinned measurements
+    assert model.predict(Impl({"a": "offload"})) == pytest.approx(0.7)
+    assert model.predict(Impl({"b": "offload"})) == pytest.approx(0.75)
+    assert model.predict(Impl()) == pytest.approx(1.0)
+    # the composite now includes the learned +0.1 interaction term
+    assert model.predict(Impl({"a": "offload", "b": "offload"})) == \
+        pytest.approx(0.55, rel=0.05)
+    notes = model.bias_notes()
+    assert notes and notes[0]["corrected_seconds"] == pytest.approx(0.1, rel=0.2)
+
+
+def test_pair_correction_converges_not_oscillates():
+    """Once the sticky term absorbs the interaction, residuals fall into
+    the deadband: further composite observations leave the correction in
+    place instead of un-flagging and re-learning it."""
+    model = CostModel(candidates=[_cand("a", "offload"),
+                                  _cand("b", "offload")],
+                      baseline_seconds=1.0)
+    model.observe(Impl(), 1.0)
+    corr_after = []
+    for _ in range(8):
+        model.observe(Impl({"a": "offload"}), 0.7)
+        model.observe(Impl({"b": "offload"}), 0.75)
+        model.observe(Impl({"a": "offload", "b": "offload"}), 0.55)
+        pair = (("a", "offload"), ("b", "offload"))
+        corr_after.append(model._pair_corr.get(pair, 0.0))
+    assert corr_after[-1] == pytest.approx(corr_after[-3], rel=0.05), \
+        "correction must settle, not keep accumulating"
+    assert corr_after[-1] == pytest.approx(0.1, rel=0.2)
+
+
 def test_compile_key_distinguishes_program_pattern_and_shapes():
     args64 = (jax.ShapeDtypeStruct((64,), jnp.float32),)
     args128 = (jax.ShapeDtypeStruct((128,), jnp.float32),)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Repo-specific lint: forbid the two bug classes past PRs fixed repeatedly.
+
+1. ``time.time()`` in timed paths (``benchmarks/`` and the core/runtime/
+   serving trees): wall-clock time is not monotonic — NTP slews and clock
+   steps corrupt interval measurements.  Timed code must use
+   ``time.perf_counter()``.  Wall-clock *metadata* (checkpoint timestamps,
+   log lines) is fine and lives outside the checked trees; a deliberate
+   exception inside them takes a ``# wallclock: <why>`` comment on the
+   same line.
+
+2. ``sys.path.insert`` in ``benchmarks/`` and ``examples/``: scripts must
+   run via ``PYTHONPATH=src`` (as CI and the README do), not by mutating
+   ``sys.path`` at import time — those hacks mask broken packaging and
+   break when files move.
+
+AST-based (comments and strings can mention the patterns freely).
+Exit 0 when clean, 1 with one line per violation otherwise.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+TIME_TIME_TREES = ("benchmarks", "src/repro/core", "src/repro/runtime",
+                   "src/repro/serving")
+SYS_PATH_TREES = ("benchmarks", "examples")
+WAIVER = "# wallclock:"
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _check_file(path: Path, patterns: set[str]) -> list[str]:
+    src = path.read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:                      # pragma: no cover
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain not in patterns:
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if chain == "time.time" and WAIVER in line:
+            continue
+        rel = path.relative_to(ROOT)
+        fix = ("use time.perf_counter() for interval timing"
+               if chain == "time.time"
+               else "run via PYTHONPATH=src instead")
+        out.append(f"{rel}:{node.lineno}: {chain} forbidden here ({fix})")
+    return out
+
+
+def main() -> int:
+    violations = []
+    for tree in TIME_TIME_TREES:
+        for path in sorted((ROOT / tree).rglob("*.py")):
+            violations += _check_file(path, {"time.time"})
+    for tree in SYS_PATH_TREES:
+        for path in sorted((ROOT / tree).rglob("*.py")):
+            violations += _check_file(path, {"sys.path.insert"})
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} forbidden-pattern violation(s).")
+        return 1
+    print("check_patterns: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
