@@ -63,6 +63,9 @@ class ModelConfig:
     frontend: str = "none"           # none | siglip_stub | audio_stub
     frontend_seq: int = 0            # number of patch/frame embeddings provided
     frontend_dim: int = 0            # embedding dim provided by the stub
+    conv_stem: bool = False          # audio frontend is a real 2-conv stem
+                                     # (k=3 stride 1 then stride 2), not a
+                                     # single linear projection
 
     # --- misc knobs ---
     qkv_bias: bool = False
@@ -177,6 +180,10 @@ class ModelConfig:
             total += enc_p
             if self.cross_attention:
                 total += n_attn * attn_p  # cross-attn per decoder layer
+        if self.conv_stem:
+            # two k=3 conv1d layers: frontend_dim -> d_model -> d_model
+            total += (3 * self.frontend_dim * self.d_model + self.d_model
+                      + 3 * self.d_model * self.d_model + self.d_model)
         return int(total)
 
     def active_param_count(self) -> int:
@@ -200,7 +207,10 @@ class ModelConfig:
             num_heads=4,
             num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
             head_dim=16,
-            d_ff=128,
+            # an MLP-free arch (falcon-mamba: d_ff=0) must stay MLP-free
+            # when reduced — the extractor benchmark scores the reduced
+            # trace against the full config's annotation
+            d_ff=min(self.d_ff, 128),
             vocab_size=256,
             num_experts=min(self.num_experts, 4),
             experts_per_token=min(self.experts_per_token, 2),
@@ -213,7 +223,11 @@ class ModelConfig:
             rglru_d_rnn=64 if self.rglru_d_rnn else 0,
             encoder_layers=min(self.encoder_layers, 2),
             encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
-            frontend_seq=min(self.frontend_seq, 16) if self.frontend_seq else 0,
+            # a conv stem downsamples frames 2x into encoder positions, so
+            # the reduced frame count must stay 2x the reduced encoder_seq
+            frontend_seq=(2 * min(self.encoder_seq, 16) if self.conv_stem
+                          else min(self.frontend_seq, 16)
+                          if self.frontend_seq else 0),
             frontend_dim=64 if self.frontend_dim else 0,
         )
 

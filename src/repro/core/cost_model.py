@@ -266,6 +266,49 @@ class CostModel:
             })
         return notes
 
+    # -- persistence ---------------------------------------------------
+    def export_state(self) -> dict:
+        """JSON-safe snapshot of everything calibration has learned: the
+        re-based all-ref time, per-gene deltas, and the sticky pairwise
+        interaction corrections.  Stored next to the measurements in the
+        plan cache so a re-opened search starts calibrated instead of from
+        the roofline seeds."""
+        return {
+            "base": self._base,
+            "delta": [[r, v, s] for (r, v), s in sorted(self._delta.items())],
+            "pair_corr": [[list(a), list(b), s]
+                          for (a, b), s in sorted(self._pair_corr.items())],
+        }
+
+    def load_state(self, state) -> bool:
+        """Merge a persisted :meth:`export_state` snapshot (tolerant of
+        malformed entries — a corrupt cache degrades to the seeds, never
+        raises).  Returns True if anything was restored."""
+        if not isinstance(state, dict) or not state:
+            return False
+        loaded = False
+        base = state.get("base")
+        if isinstance(base, (int, float)) and base > 0.0:
+            self._base = float(base)
+            loaded = True
+        for item in state.get("delta", ()):
+            try:
+                r, v, s = item
+                self._delta[(str(r), str(v))] = float(s)
+                loaded = True
+            except (TypeError, ValueError):
+                continue
+        for item in state.get("pair_corr", ()):
+            try:
+                a, b, s = item
+                pair = (tuple(map(str, a)), tuple(map(str, b)))
+                if len(pair[0]) == 2 and len(pair[1]) == 2:
+                    self._pair_corr[pair] = float(s)
+                    loaded = True
+            except (TypeError, ValueError):
+                continue
+        return loaded
+
     # -- diagnostics ---------------------------------------------------
     def mean_abs_rel_error(self, last: int | None = None) -> float:
         """Mean |predicted - measured| / measured over the observation

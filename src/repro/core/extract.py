@@ -7,8 +7,12 @@ someone decides which blocks are regions.  This module is the automatic
 version — trace a jitted function, walk its jaxpr, and statically
 recognize the computational blocks the kernel registry already knows how
 to offload (``attn_core``, ``mlp_core``, ``ssm_scan``, ``rglru_scan``,
-``fir_bank``, ``rmsnorm``), the function-block extension of the
-loop-statement pipeline (arXiv 2004.09883).  The result is an
+``fir_bank``, ``rmsnorm``, ``mlp_gelu``, ``conv_stem``,
+``moe_dispatch``), the function-block extension of the loop-statement
+pipeline (arXiv 2004.09883).  Adjacent legal matches are additionally
+*stitched* into fused regions (``left+right``) the planner prices against
+their split forms, and every near-miss is recorded as a structured
+:class:`Rejection` for diagnostics.  The result is an
 :class:`~repro.core.program.OffloadableProgram` that flows into the
 planner, strategies, surrogate, executor, and plan cache unchanged.
 
@@ -58,11 +62,11 @@ except ImportError:                     # pragma: no cover - older jax
 
 from repro.core.intensity import RegionAnalysis, analyze_region
 from repro.core.program import OffloadableProgram, Region
-from repro.core.regions import REGISTRY, Impl, dispatch
+from repro.core.regions import REGISTRY, Impl, dispatch, register_variant
 
 # families this pass can recognize, in recognizer precedence order
-FAMILIES = ("attn_core", "ssm_scan", "rglru_scan", "fir_bank", "mlp_core",
-            "rmsnorm")
+FAMILIES = ("attn_core", "ssm_scan", "rglru_scan", "fir_bank", "moe_dispatch",
+            "conv_stem", "mlp_gelu", "mlp_core", "rmsnorm")
 
 # dtypes the registered kernel variants accept (legality gate)
 _FLOAT_OK = ("bfloat16", "float32")
@@ -180,14 +184,15 @@ class _Ctx:
 @dataclass
 class CandidateSite:
     """One enumerator hit — the analogue of a paper 'loop statement'."""
-    kind: str           # "scan" | "while" | "norm" | "gate"
+    kind: str           # "scan" | "while" | "norm" | "gate" | "act" | "conv" | "route"
     path: tuple         # enclosing container kinds from the root
     eqn_index: int
     primitive: str
 
 
 def enumerate_sites(ctx: _Ctx) -> list[CandidateSite]:
-    """All candidate anchors: loops plus softmax/norm/gate eqns."""
+    """All candidate anchors: loops plus softmax/norm/gate/activation/conv/
+    routing eqns."""
     sites = []
     for jid in ctx.order:
         node = ctx.nodes[jid]
@@ -199,6 +204,12 @@ def enumerate_sites(ctx: _Ctx) -> list[CandidateSite]:
                 sites.append(CandidateSite("norm", node.path, i, name))
             elif name == "logistic":
                 sites.append(CandidateSite("gate", node.path, i, name))
+            elif name == "tanh":
+                sites.append(CandidateSite("act", node.path, i, name))
+            elif name == "conv_general_dilated":
+                sites.append(CandidateSite("conv", node.path, i, name))
+            elif name == "top_k":
+                sites.append(CandidateSite("route", node.path, i, name))
             elif name == "pjit" and _silu_inner(e) is not None:
                 sites.append(CandidateSite("gate", node.path, i, name))
     return sites
@@ -334,11 +345,26 @@ class RegionMatch:
 
 
 @dataclass
+class Rejection:
+    """A structured near-miss: a candidate site that looked like ``family``
+    but failed a recognizer precondition, a legality gate, or a stitching
+    check.  ``stage`` says which layer said no; ``reason`` is the
+    human-readable diagnostic ``--explain`` renders."""
+    family: str
+    path: tuple
+    reason: str
+    primitive: str = ""
+    eqn_index: int = -1
+    stage: str = "recognizer"        # recognizer | legality | stitch
+
+
+@dataclass
 class ExtractionReport:
     """What the static pass found (before and after legality)."""
     name: str
     sites: list = field(default_factory=list)
     matches: list = field(default_factory=list)     # every RegionMatch
+    rejections: list = field(default_factory=list)  # every Rejection
     loop_count: int = 0
 
     @property
@@ -356,12 +382,17 @@ class ExtractionReport:
     def summary(self) -> str:
         lines = [f"extract[{self.name}]: {len(self.sites)} candidate sites, "
                  f"{self.loop_count} loops, "
-                 f"{len(self.legal_matches)}/{len(self.matches)} legal matches"]
+                 f"{len(self.legal_matches)}/{len(self.matches)} legal matches, "
+                 f"{len(self.rejections)} rejections"]
         for m in self.matches:
             mark = "+" if m.legal else "-"
             why = "" if m.legal else f"  [{m.reason}]"
             lines.append(f"  {mark} {m.family} @depth{len(m.path)} "
                          f"args={m.arg_shapes()}{why}")
+        for r in self.rejections:
+            at = f" @{r.primitive}" if r.primitive else ""
+            lines.append(f"  ! {r.family} @depth{len(r.path)}{at} "
+                         f"[{r.stage}] {r.reason}")
         return "\n".join(lines)
 
 
@@ -765,6 +796,319 @@ def _match_swiglu(ctx: _Ctx, jid: int, idx: int) -> Optional[RegionMatch]:
 
 
 # ---------------------------------------------------------------------------
+# Recognizer: gelu-MLP (dot -> gelu tanh-approx -> dot), whisper encoder
+# ---------------------------------------------------------------------------
+def _scalar_lit(v) -> bool:
+    return isinstance(v, Literal) and np.ndim(v.val) == 0
+
+
+def _gelu_anchor(ctx: _Ctx, node: _Node, tanh_eqn):
+    """Recognize ``jax.nn.gelu``'s tanh approximation around a ``tanh`` eqn:
+    ``0.5 * h * (1 + tanh(c1 * (h + c2 * h**3)))``.  Returns ``(h, g)`` —
+    the gelu input var and output var — or None."""
+    jaxpr = node.jaxpr
+    prod = node.producers.get(tanh_eqn.invars[0])
+    if prod is None or prod[1].primitive.name != "mul":
+        return None
+    a, b = prod[1].invars
+    inner = a if _scalar_lit(b) else b if _scalar_lit(a) else None
+    if inner is None:
+        return None
+    prod = node.producers.get(inner)
+    if prod is None or prod[1].primitive.name != "add":
+        return None
+    h = None
+    for x1, x2 in (tuple(prod[1].invars), tuple(prod[1].invars)[::-1]):
+        p2 = node.producers.get(x2)
+        if p2 is None or p2[1].primitive.name != "mul":
+            continue
+        ma, mb = p2[1].invars
+        cube = ma if _scalar_lit(mb) else mb if _scalar_lit(ma) else None
+        if cube is None:
+            continue
+        p3 = node.producers.get(cube)
+        if p3 and p3[1].primitive.name == "integer_pow" \
+                and p3[1].params.get("y") == 3 and p3[1].invars[0] is x1:
+            h = x1
+            break
+    if h is None:
+        return None
+    # forward: (1 + tanh), then the 0.5 and h factors in either mul order
+    adds = [e for _, e in node.consumers.get(tanh_eqn.outvars[0], [])
+            if e.primitive.name == "add"]
+    if len(adds) != 1:
+        return None
+    v, used_h = adds[0].outvars[0], False
+    for _ in range(3):
+        muls = [e for _, e in node.consumers.get(v, [])
+                if e.primitive.name == "mul"]
+        if len(muls) != 1:
+            break
+        m = muls[0]
+        other = m.invars[1] if m.invars[0] is v else m.invars[0]
+        if not _scalar_lit(other):
+            _, src = _peel(ctx, jaxpr, other,
+                           ("convert_element_type", "broadcast_in_dim"))
+            if src is not h:
+                break
+            used_h = True
+        v = m.outvars[0]
+    if not used_h:
+        return None
+    return h, v
+
+
+def _peel_bias(ctx: _Ctx, jaxpr, v, width: int):
+    """Peel a broadcast/convert/reshape chain down to a 1-D ``width`` bias."""
+    _, b = _peel(ctx, jaxpr, v,
+                 ("broadcast_in_dim", "convert_element_type", "reshape"))
+    if len(_shape(b)) == 1 and _shape(b)[0] == width:
+        return b
+    return None
+
+
+def _match_gelu_mlp(ctx: _Ctx, jid: int, idx: int):
+    node = ctx.nodes[jid]
+    jaxpr = node.jaxpr
+    eqn = jaxpr.eqns[idx]
+    if eqn.primitive.name != "tanh":
+        return None
+    hit = _gelu_anchor(ctx, node, eqn)
+    if hit is None:
+        return None
+    h, g = hit
+    # backward: h = dot(x, w_up) + b_up
+    _, hsrc = _peel(ctx, jaxpr, h, ("convert_element_type",))
+    prod = node.producers.get(hsrc)
+    if prod is None or prod[1].primitive.name != "add":
+        return None
+    dot = bias_v = None
+    for a, b in (tuple(prod[1].invars), tuple(prod[1].invars)[::-1]):
+        pa = node.producers.get(a)
+        if pa and _is_matmul(pa[1]):
+            dot, bias_v = pa[1], b
+            break
+    if dot is None:
+        return None
+    x, w_up = dot.invars
+    if len(_shape(w_up)) != 2:
+        return None
+    b_up = _peel_bias(ctx, jaxpr, bias_v, _shape(w_up)[-1])
+    if b_up is None:
+        return None
+    # forward: g @ w_down + b_down
+    d2s = [e for _, e in node.consumers.get(g, []) if _is_matmul(e)]
+    if len(d2s) != 1 or d2s[0].invars[0] is not g:
+        return None
+    w_down = d2s[0].invars[1]
+    if len(_shape(w_down)) != 2:
+        return None
+    adds = [e for _, e in node.consumers.get(d2s[0].outvars[0], [])
+            if e.primitive.name == "add"]
+    if len(adds) != 1:
+        return None
+    add2 = adds[0]
+    bias2 = add2.invars[1] if add2.invars[0] is d2s[0].outvars[0] \
+        else add2.invars[0]
+    b_down = _peel_bias(ctx, jaxpr, bias2, _shape(w_down)[-1])
+    if b_down is None:
+        return None
+    out = add2.outvars[0]
+    cons = node.consumers.get(out, [])
+    if len(cons) == 1 and cons[0][1].primitive.name == "convert_element_type" \
+            and _dtype(cons[0][1].outvars[0]) == _dtype(x):
+        out = cons[0][1].outvars[0]
+    invars = (x, w_up, b_up, w_down, b_down)
+    covered, leaves = _slice_from(node, [out], list(invars))
+    if leaves:
+        return None
+    return RegionMatch("mlp_gelu", jid, node.path, invars, (out,),
+                       frozenset(covered))
+
+
+# ---------------------------------------------------------------------------
+# Recognizer: conv stem (conv_general_dilated + bias + gelu)
+# ---------------------------------------------------------------------------
+def _match_conv_stem(ctx: _Ctx, jid: int, idx: int):
+    node = ctx.nodes[jid]
+    jaxpr = node.jaxpr
+    conv = jaxpr.eqns[idx]
+    if conv.primitive.name != "conv_general_dilated":
+        return None
+    x, w = conv.invars
+    if len(_shape(x)) != 3 or len(_shape(w)) != 3:
+        return None                       # only 1-D (audio) stems
+    p = conv.params
+    strides = tuple(p["window_strides"])
+    lhs_dil = tuple(p.get("lhs_dilation") or ())
+    rhs_dil = tuple(p.get("rhs_dilation") or ())
+
+    def rej(reason):
+        return Rejection("conv_stem", node.path, reason,
+                         primitive="conv_general_dilated", eqn_index=idx)
+
+    if any(d != 1 for d in lhs_dil) or any(d != 1 for d in rhs_dil):
+        return rej(f"dilated convolution (lhs_dilation={list(lhs_dil)}, "
+                   f"rhs_dilation={list(rhs_dil)}) — no registered kernel "
+                   "serves dilation")
+    if p.get("feature_group_count", 1) != 1 \
+            or p.get("batch_group_count", 1) != 1:
+        return rej("grouped convolution — no registered kernel serves "
+                   "feature/batch groups")
+    want_dn = jax.lax.conv_dimension_numbers(_shape(x), _shape(w),
+                                             ("NHC", "HIO", "NHC"))
+    if p["dimension_numbers"] != want_dn:
+        return rej(f"conv layout {p['dimension_numbers']} is not the "
+                   "stem's NHC/HIO/NHC")
+    win, ks, stride = _shape(x)[1], _shape(w)[0], strides[0]
+    out_w = -(-win // stride)
+    tot = max((out_w - 1) * stride + ks - win, 0)
+    same = ((tot // 2, tot - tot // 2),)
+    if tuple(tuple(q) for q in p["padding"]) != same:
+        return rej(f"conv padding {list(p['padding'])} is not SAME — the "
+                   "registered stem kernel assumes SAME padding")
+    # forward: conv -> +bias -> gelu
+    adds = [e for _, e in node.consumers.get(conv.outvars[0], [])
+            if e.primitive.name == "add"]
+    if len(adds) != 1:
+        return None
+    add = adds[0]
+    bias_v = add.invars[1] if add.invars[0] is conv.outvars[0] \
+        else add.invars[0]
+    b = _peel_bias(ctx, jaxpr, bias_v, _shape(w)[-1])
+    if b is None:
+        return None
+    h = add.outvars[0]
+    g = None
+    for e in jaxpr.eqns[idx:]:
+        if e.primitive.name == "tanh":
+            hit = _gelu_anchor(ctx, node, e)
+            if hit is not None and hit[0] is h:
+                g = hit[1]
+                break
+    if g is None:
+        return None
+    covered, leaves = _slice_from(node, [g], [x, w, b])
+    if leaves:
+        return None
+    return RegionMatch("conv_stem", jid, node.path, (x, w, b), (g,),
+                       frozenset(covered), {"stride": int(stride)})
+
+
+# ---------------------------------------------------------------------------
+# Recognizer: MoE dispatch (top-k gate -> one-hot routing -> expert swiglu)
+# ---------------------------------------------------------------------------
+def _back_to_router_dot(node: _Node, v, limit: int = 16):
+    """Walk backward from the routed probabilities through the softmax chain
+    (wrappers crossed via their data operand) to the router matmul."""
+    for _ in range(limit):
+        if isinstance(v, Literal):
+            return None
+        prod = node.producers.get(v)
+        if prod is None:
+            return None
+        e = prod[1]
+        nm = e.primitive.name
+        if nm == "dot_general":
+            return e
+        if nm in _WRAPPERS or nm in (
+                "div", "sub", "exp", "convert_element_type", "reduce_max",
+                "mul", "add", "max", "stop_gradient", "transpose"):
+            v = e.invars[0]
+            continue
+        return None
+    return None
+
+
+def _match_moe_dispatch(ctx: _Ctx, jid: int, idx: int):
+    node = ctx.nodes[jid]
+    jaxpr = node.jaxpr
+    topk = jaxpr.eqns[idx]
+    if topk.primitive.name != "top_k":
+        return None
+    k = int(topk.params.get("k", 0))
+
+    def rej(reason):
+        return Rejection("moe_dispatch", node.path, reason,
+                         primitive="top_k", eqn_index=idx)
+
+    router_dot = _back_to_router_dot(node, topk.invars[0])
+    if router_dot is None or len(_shape(router_dot.invars[1])) != 2:
+        return None                       # top_k not fed by a router matmul
+    w_router = router_dot.invars[1]
+    _, x = _peel(ctx, jaxpr, router_dot.invars[0], ("convert_element_type",))
+    num_experts = _shape(w_router)[-1]
+
+    # everything downstream of the routing decision, at this jaxpr level
+    reach: set = set()
+    stack = [v for v in topk.outvars if not _is_drop(v)]
+    while stack:
+        v = stack.pop()
+        if id(v) in reach:
+            continue
+        reach.add(id(v))
+        for _, e in node.consumers.get(v, []):
+            stack.extend(ov for ov in e.outvars if not _is_drop(ov))
+
+    # per-expert FFN: dot_generals whose rank-3 rhs is routing-independent
+    # (expert weight stacks [E, D, F]) but whose lhs is routed data
+    expert_dots = [e for e in jaxpr.eqns
+                   if e.primitive.name == "dot_general"
+                   and len(_shape(e.invars[1])) == 3
+                   and id(e.invars[0]) in reach
+                   and id(e.invars[1]) not in reach]
+    if len(expert_dots) != 3:
+        return rej("routing found but no per-expert FFN "
+                   f"({len(expert_dots)} expert matmuls, expected 3)")
+    gate_dot = down_dot = None
+    for e in expert_dots:
+        for _, c in node.consumers.get(e.outvars[0], []):
+            if _silu_inner(c) is not None:
+                gate_dot = e
+        pl = node.producers.get(e.invars[0])
+        if pl is not None and pl[1].primitive.name == "mul":
+            down_dot = e
+    up_dots = [e for e in expert_dots if e is not gate_dot and e is not down_dot]
+    if gate_dot is None or down_dot is None or len(up_dots) != 1:
+        return rej("per-expert FFN is not the swiglu shape "
+                   "(gate/up/down matmuls not identified)")
+    w_gate, w_up, w_down = (gate_dot.invars[1], up_dots[0].invars[1],
+                            down_dot.invars[1])
+
+    # combine: expert outputs gathered back to tokens by one more einsum
+    combines = [e for _, e in node.consumers.get(down_dot.outvars[0], [])
+                if e.primitive.name == "dot_general"]
+    if len(combines) != 1:
+        return rej("data-dependent MoE routing (scatter/gather combine) — "
+                   "no dense combine einsum to bound statically")
+    out = combines[0].outvars[0]
+    cons = node.consumers.get(out, [])
+    if len(cons) == 1 and cons[0][1].primitive.name == "convert_element_type" \
+            and _dtype(cons[0][1].outvars[0]) == _dtype(x):
+        out = cons[0][1].outvars[0]
+    invars = (x, w_router, w_gate, w_up, w_down)
+    covered, leaves = _slice_from(node, [out], list(invars))
+    if leaves:
+        return None
+    # capacity bound: the dense form compares each token's queue position
+    # against a compile-time int (keep = pos_in_expert < c); without it the
+    # routed block has no static shape and cannot be offloaded
+    capacity = None
+    for i in covered:
+        e = jaxpr.eqns[i]
+        if e.primitive.name == "lt" and _scalar_lit(e.invars[1]) \
+                and "int" in _dtype(e.invars[0]):
+            capacity = max(capacity or 0, int(e.invars[1].val))
+    if not capacity:
+        return rej("data-dependent MoE routing without a capacity bound — "
+                   "token queues have no static size")
+    return RegionMatch("moe_dispatch", jid, node.path, invars, (out,),
+                       frozenset(covered),
+                       {"num_experts": int(num_experts), "k": k,
+                        "capacity": int(capacity)})
+
+
+# ---------------------------------------------------------------------------
 # Legality analyzer
 # ---------------------------------------------------------------------------
 def _legalize(ctx: _Ctx, m: RegionMatch) -> RegionMatch:
@@ -874,9 +1218,20 @@ def _make_build(ctx: _Ctx, matches: list) -> Callable[[Impl], Callable]:
 
     def build(impl: Impl):
         impl = Impl(dict(impl))
-        active = {jid: [m for m in ms if impl.pick(m.family) != "ref"]
-                  for jid, ms in by_jaxpr.items()}
-        active = {jid: ms for jid, ms in active.items() if ms}
+        active = {}
+        for jid, ms in by_jaxpr.items():
+            picked = [m for m in ms if impl.pick(m.family) != "ref"]
+            # a stitched region overlaps its split halves; largest cover
+            # wins so a fused pick supersedes the two individual picks
+            picked.sort(key=lambda m: -len(m.covered))
+            kept, used = [], set()
+            for m in picked:
+                if m.covered & used:
+                    continue
+                used |= m.covered
+                kept.append(m)
+            if kept:
+                active[jid] = kept
         hot = set()                       # jaxpr ids whose subtree substitutes
         for jid in active:
             for nid in ctx.order:
@@ -977,8 +1332,28 @@ def _ensure_registry() -> None:
             pass
 
 
-def _find_matches(ctx: _Ctx) -> list[RegionMatch]:
+# Family -> recognizer entry point.  ``tools/check_patterns.py`` walks this
+# table to enforce that every extractable family has a recognizer and test
+# coverage; keep it in sync with FAMILIES.
+RECOGNIZERS = {
+    "attn_core": _match_attention,
+    "ssm_scan": _match_affine_scan,
+    "rglru_scan": _match_affine_scan,
+    "fir_bank": _match_fir,
+    "mlp_core": _match_swiglu,
+    "rmsnorm": _match_rmsnorm,
+    "mlp_gelu": _match_gelu_mlp,
+    "conv_stem": _match_conv_stem,
+    "moe_dispatch": _match_moe_dispatch,
+}
+
+
+def _find_matches(ctx: _Ctx):
+    """Run every recognizer pass; returns ``(matches, rejections)`` where
+    matches have been legalized and rejections are structured near-misses
+    surfaced by recognizers themselves."""
     matches: list[RegionMatch] = []
+    rejections: list[Rejection] = []
     claimed: dict[int, set] = {}
     suppressed: set[int] = set()          # jaxpr ids interior to a match
 
@@ -997,7 +1372,10 @@ def _find_matches(ctx: _Ctx) -> list[RegionMatch]:
         ("scan", _match_attention),
         ("scan", _match_affine_scan),
         ("while", _match_affine_while),
+        ("top_k", _match_moe_dispatch),
+        ("conv_general_dilated", _match_conv_stem),
         ("pjit", _match_swiglu),
+        ("tanh", _match_gelu_mlp),
         ("rsqrt", _match_rmsnorm),
     )
     for prim, matcher in passes:
@@ -1011,9 +1389,104 @@ def _find_matches(ctx: _Ctx) -> list[RegionMatch]:
                 if i in claimed.get(jid, set()):
                     continue
                 hit = matcher(ctx, jid, i)
-                if hit is not None:
+                if isinstance(hit, Rejection):
+                    rejections.append(hit)
+                elif hit is not None:
                     admit(hit)
-    return [_legalize(ctx, m) for m in matches]
+    return [_legalize(ctx, m) for m in matches], rejections
+
+
+# ---------------------------------------------------------------------------
+# Stitching: fuse adjacent legal regions into a single offload unit
+# ---------------------------------------------------------------------------
+def _register_fused(family: str) -> None:
+    """Generic offload variant for a stitched pair: run each half via its
+    best registered non-ref implementation, routing the boundary values
+    directly (this is what saves the host<->device boundary transfers)."""
+    if "offload" in REGISTRY.get(family, {}):
+        return
+
+    def fused(*args, left, right, n_left, wiring, left_kwargs, right_kwargs):
+        def best(fam):
+            fam_variants = REGISTRY.get(fam, {})
+            for v in ("pallas", "offload", "seq", "ref"):
+                if v in fam_variants:
+                    return fam_variants[v]
+            raise KeyError(f"no variant registered for {fam}")
+        lres = best(left)(*args[:n_left], **dict(left_kwargs))
+        louts = lres if isinstance(lres, tuple) else (lres,)
+        rest = args[n_left:]
+        rargs = [louts[i] if kind == "out"
+                 else args[i] if kind == "larg" else rest[i]
+                 for kind, i in wiring]
+        return best(right)(*rargs, **dict(right_kwargs))
+
+    fused.__name__ = f"fused_{family.replace('+', '_')}"
+    register_variant(family, "offload")(fused)
+
+
+def _stitch(ctx: _Ctx, matches: list):
+    """Producer/consumer-adjacent legal matches in the same jaxpr emit an
+    additional *fused* RegionMatch spanning both eqn slices.  The fused
+    region is a first-class variant: the planner measures it against the
+    split form and the registry version bump re-keys the plan cache."""
+    fused: list[RegionMatch] = []
+    rejections: list[Rejection] = []
+    base = [m for m in matches if m.legal and "+" not in m.family]
+    for m1 in base:
+        for m2 in base:
+            if m1 is m2 or m1.jaxpr_id != m2.jaxpr_id:
+                continue
+            node = ctx.nodes[m1.jaxpr_id]
+            out_ids = {id(v): i for i, v in enumerate(m1.outvars)}
+            if not any(id(v) in out_ids for v in m2.invars):
+                continue                  # not adjacent
+            if m1.covered & m2.covered:
+                continue
+            # no m1 input may be produced inside m2 (would be a cycle)
+            if any(node.producers.get(v, (None,))[0] in m2.covered
+                   for v in m1.invars):
+                continue
+            family = f"{m1.family}+{m2.family}"
+            # fusion legality: the boundary must be internal to the pair
+            union = m1.covered | m2.covered
+            root_outs = set(id(v) for v in node.jaxpr.outvars
+                            if not isinstance(v, Literal))
+            escaped = False
+            for v in m1.outvars:
+                if id(v) in root_outs or any(
+                        ci not in union
+                        for ci, _ in node.consumers.get(v, [])):
+                    escaped = True
+                    break
+            if escaped:
+                rejections.append(Rejection(
+                    family, node.path,
+                    "fusion illegal: boundary value escapes the fused "
+                    "region", stage="stitch"))
+                continue
+            larg_ids = {id(v): i for i, v in enumerate(m1.invars)}
+            wiring, extra = [], []
+            for v in m2.invars:
+                if id(v) in out_ids:
+                    wiring.append(("out", out_ids[id(v)]))
+                elif id(v) in larg_ids:
+                    wiring.append(("larg", larg_ids[id(v)]))
+                else:
+                    wiring.append(("arg", len(extra)))
+                    extra.append(v)
+            fm = RegionMatch(
+                family, m1.jaxpr_id, node.path,
+                tuple(m1.invars) + tuple(extra), tuple(m2.outvars),
+                frozenset(union),
+                {"left": m1.family, "right": m2.family,
+                 "n_left": len(m1.invars),
+                 "wiring": tuple(wiring),
+                 "left_kwargs": dict(m1.static_kwargs),
+                 "right_kwargs": dict(m2.static_kwargs)})
+            _register_fused(family)
+            fused.append(_legalize(ctx, fm))
+    return fused, rejections
 
 
 def extract(fn: Callable, args: tuple, *, name: str = "program"
@@ -1028,7 +1501,12 @@ def extract(fn: Callable, args: tuple, *, name: str = "program"
     report.sites = enumerate_sites(ctx)
     report.loop_count = sum(1 for s in report.sites
                             if s.kind in ("scan", "while"))
-    report.matches = _find_matches(ctx)
+    matches, rejections = _find_matches(ctx)
+    stitched, srejs = _stitch(ctx, matches)
+    report.matches = matches + stitched
+    report.rejections = rejections + srejs + [
+        Rejection(m.family, m.path, m.reason, stage="legality")
+        for m in matches if not m.legal]
     report._ctx = ctx                     # keeps jaxpr ids alive
     return report
 

@@ -118,6 +118,15 @@ def _count_jaxpr(jaxpr, mult: float, acc: RegionAnalysis) -> None:
             acc.flops += mult * in_elems
         elif prim == "integer_pow":
             acc.flops += mult * out_elems * 2
+        elif prim == "top_k":
+            # selection network: ~1 comparison per input element
+            acc.flops += mult * _aval_elems(eqn.invars[0].aval)
+        elif prim == "sort":
+            n = max(_aval_elems(eqn.invars[0].aval), 2)
+            acc.flops += mult * n * float(np.log2(n))
+        elif prim == "scatter-add":
+            # one add per routed update element (MoE slot dispatch)
+            acc.flops += mult * _aval_elems(eqn.invars[2].aval)
         elif prim == "scan":
             length = float(eqn.params.get("length", 1))
             acc.loop_count += 1

@@ -221,6 +221,25 @@ class PlanCache:
                     by_pattern[key] = dict(m)
         return list(by_pattern.values())
 
+    def cost_model_for(self, measurement_key: str) -> dict:
+        """The newest persisted ``CostModel.export_state`` snapshot taken
+        under the same measurement conditions, or ``{}``.  Calibrated
+        deltas and pair-interaction corrections ride next to the
+        measurements they were learned from, so a re-opened search's
+        surrogate starts where the previous run's calibration ended."""
+        if not measurement_key:
+            return {}
+        state: dict = {}
+        entries = sorted(self._data["entries"].values(),
+                         key=lambda e: str(e.get("created_at", "")))
+        for entry in entries:
+            if entry.get("measurement_key") != measurement_key:
+                continue
+            cm = entry.get("cost_model")
+            if isinstance(cm, dict) and cm:
+                state = dict(cm)
+        return state
+
     def invalidate(self, key: str) -> bool:
         existed = self._data["entries"].pop(key, None) is not None
         if existed:

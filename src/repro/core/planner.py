@@ -215,6 +215,10 @@ class PlanReport:
     verify_workers: int = 1
     verify_wall_s: float = 0.0
     compile_wall_s: float = 0.0
+    # the search's final CostModel calibration (export_state snapshot),
+    # persisted next to the measurements so re-opened searches start from
+    # calibrated deltas instead of the roofline seeds
+    cost_model_state: dict = field(default_factory=dict)
 
     def best_impl(self) -> Impl:
         """The selected pattern as a dispatchable Impl."""
@@ -501,6 +505,11 @@ class AutoOffloader:
             model = CostModel(candidates=state.ranked,
                               baseline_seconds=report.baseline.run_seconds
                               if report.baseline.ok else 0.0)
+            # restore persisted calibration (deltas + pair-interaction
+            # corrections) from sibling entries under the same measurement
+            # conditions; this run's own observations below refine it
+            if store is not None:
+                model.load_state(store.cost_model_for(mkey))
             if report.baseline.ok:
                 model.observe(Impl(), report.baseline.run_seconds)
             for m in sorted((p for p in primed if p.ok and p.mapping()),
@@ -526,6 +535,7 @@ class AutoOffloader:
             # terms"): pairs whose multi-gene observations stayed systematically
             # biased are surfaced so the surrogate's trust in composite
             # predictions is visible
+            report.cost_model_state = model.export_state()
             bias = model.bias_notes()
             if bias:
                 report.search_trace.append(
@@ -612,6 +622,9 @@ class AutoOffloader:
         return {
             "measurement_key": measurement_cache_key(program),
             "measurements": persisted,
+            # the calibrated surrogate state, keyed with the measurements it
+            # was learned from (see PlanCache.cost_model_for)
+            "cost_model": dict(report.cost_model_state),
             "program": report.program,
             "backend": jax.default_backend(),
             "best_pattern": dict(report.best_pattern),

@@ -49,6 +49,46 @@ def _mlp_offload(x, w_gate, w_up, w_down):
     return (jax.nn.silu(g) * u) @ w_down
 
 
+@register_variant("mlp_gelu", "ref")
+def _mlp_gelu_ref(x, w_up, b_up, w_down, b_down):
+    return L.gelu_mlp(x, w_up, b_up, w_down, b_down)
+
+
+@register_variant("mlp_gelu", "offload")
+def _mlp_gelu_offload(x, w_up, b_up, w_down, b_down):
+    # one-pass formulation with f32 activation accumulation (what a fused
+    # Pallas gelu-MLP kernel computes between HBM reads)
+    h = jnp.dot(x, w_up, preferred_element_type=jnp.float32) + b_up
+    g = jax.nn.gelu(h).astype(x.dtype)
+    return (g @ w_down + b_down).astype(x.dtype)
+
+
+@register_variant("conv_stem", "ref")
+def _conv_stem_ref(x, w, b, *, stride=1):
+    # x: [B, W, Cin]; w: [K, Cin, Cout] (whisper's k=3 conv1d stem layer)
+    h = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NHC", "HIO", "NHC"))
+    return jax.nn.gelu(h + b)
+
+
+@register_variant("conv_stem", "offload")
+def _conv_stem_offload(x, w, b, *, stride=1):
+    # im2col formulation: gather the K strided windows and run ONE matmul —
+    # the layout a systolic offload target wants (conv as dense GEMM)
+    k, cin, cout = w.shape
+    win = x.shape[1]
+    out_w = -(-win // stride)
+    pad_total = max((out_w - 1) * stride + k - win, 0)
+    lo = pad_total // 2
+    xp = jnp.pad(x, ((0, 0), (lo, pad_total - lo), (0, 0)))
+    span = (out_w - 1) * stride + 1
+    cols = jnp.concatenate([xp[:, i:i + span:stride, :] for i in range(k)],
+                           axis=-1)                     # [B, out_w, K*Cin]
+    h = cols @ w.reshape(k * cin, cout)
+    return jax.nn.gelu(h + b)
+
+
 # ---------------------------------------------------------------------------
 # Attention block
 # ---------------------------------------------------------------------------
@@ -230,7 +270,8 @@ def mlp_apply(p, x, *, cfg: ModelConfig, impl=None):
     if "w_gate" in p:
         out = dispatch("mlp_core", impl, h, p["w_gate"], p["w_up"], p["w_down"])
     else:
-        out = L.gelu_mlp(h, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+        out = dispatch("mlp_gelu", impl, h, p["w_up"], p["b_up"],
+                       p["w_down"], p["b_down"])
     return x + out.astype(x.dtype)
 
 
@@ -261,7 +302,7 @@ def moe_apply(p, x, *, cfg: ModelConfig, impl=None):
     moe_out = dispatch("moe_ffn", impl, flat,
                        {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")},
                        num_experts=cfg.num_experts, k=cfg.experts_per_token,
-                       capacity_factor=cfg.capacity_factor)
+                       capacity_factor=cfg.capacity_factor, inner_impl=impl)
     out = moe_out.reshape(b, s, d)
     if "dense" in p:
         dp = p["dense"]

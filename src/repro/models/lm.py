@@ -66,7 +66,17 @@ def model_template(cfg: ModelConfig) -> dict:
     if not cfg.tie_embeddings:
         t["unembed"] = spec([d, cfg.vocab_size], ("embed", "vocab"))
     if cfg.frontend != "none":
-        t["w_front"] = spec([cfg.frontend_dim, d], ("frontend", "embed"))
+        if cfg.conv_stem:
+            # whisper-style 2-conv stem: k=3 stride 1 (mel -> d) then k=3
+            # stride 2 (d -> d, halves the frame count to encoder_seq)
+            t["stem"] = {
+                "w1": spec([3, cfg.frontend_dim, d], (None, "frontend", "embed")),
+                "b1": spec([d], ("embed",), "zeros"),
+                "w2": spec([3, d, d], (None, None, "embed")),
+                "b2": spec([d], ("embed",), "zeros"),
+            }
+        else:
+            t["w_front"] = spec([cfg.frontend_dim, d], ("frontend", "embed"))
     if cfg.encoder_layers:
         enc_unit = {"attn": B.attn_template(cfg),
                     "ffn": B.mlp_template(cfg, gelu=True)}
@@ -240,8 +250,21 @@ def _apply_unit_decode(unit_params, unit_cache, x, *, cfg, kinds, pos, impl):
 # Encoder (whisper)
 # ---------------------------------------------------------------------------
 def encode(params, frames, *, cfg, impl=None):
-    """frames: [B, S_enc, frontend_dim] -> [B, S_enc, D]."""
-    x = (frames @ params["w_front"]).astype(jnp.dtype(cfg.dtype))
+    """frames: [B, S_frames, frontend_dim] -> [B, S_enc, D].
+
+    With ``cfg.conv_stem`` the frames pass through whisper's two k=3 conv1d
+    layers (stride 1 then stride 2, gelu after each) so S_enc = S_frames/2;
+    otherwise a single linear projection with S_enc = S_frames."""
+    if "stem" in params:
+        from repro.core.regions import dispatch
+        st = params["stem"]
+        x = frames.astype(st["w1"].dtype)    # conv needs matching dtypes
+        x = dispatch("conv_stem", impl, x, st["w1"], st["b1"], stride=1)
+        x = dispatch("conv_stem", impl, x.astype(st["w2"].dtype),
+                     st["w2"], st["b2"], stride=2)
+        x = x.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = (frames @ params["w_front"]).astype(jnp.dtype(cfg.dtype))
     pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
                            x.shape[:2])
 

@@ -39,14 +39,20 @@ def moe_capacity(n_tokens: int, num_experts: int, k: int, capacity_factor: float
     return max(8, -(-c // 8) * 8)   # round up to 8 for TPU-lane friendliness
 
 
-@register_variant("moe_ffn", "ref")
-def moe_token_onehot(x, params, *, num_experts: int, k: int, capacity_factor: float):
-    """Token-choice top-k with one-hot dispatch.  x: [T, D]."""
+@register_variant("moe_dispatch", "ref")
+def moe_dispatch_dense(x, w_router, w_gate, w_up, w_down, *, num_experts: int,
+                       k: int, capacity: int):
+    """Capacity-bounded token-choice top-k with one-hot dispatch.  x: [T, D].
+
+    The flat-argument, static-capacity form of the GShard dense dispatch —
+    data-dependent routing is bounded by the Python-int ``capacity``, which
+    is what makes the block legal for static offload (the extractor's
+    ``moe_dispatch`` recognizer keys on exactly this bound)."""
     t, d = x.shape
-    probs = router_probs(x, params["router"])                 # [T, E]
+    probs = router_probs(x, w_router)                         # [T, E]
     gate_vals, gate_idx = jax.lax.top_k(probs, k)             # [T, k]
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
-    c = moe_capacity(t, num_experts, k, capacity_factor)
+    c = int(capacity)
 
     # position of each (token, choice) within its expert queue
     onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.int32)   # [T, k, E]
@@ -64,13 +70,61 @@ def moe_token_onehot(x, params, *, num_experts: int, k: int, capacity_factor: fl
     combine = combine.sum(1)                                  # [T, E, C]
 
     xe = jnp.einsum("td,tec->ecd", x, disp)                   # [E, C, D]
-    ye = _expert_ffn(xe, params["w_gate"], params["w_up"], params["w_down"])
+    ye = _expert_ffn(xe, w_gate, w_up, w_down)
     return jnp.einsum("ecd,tec->td", ye, combine).astype(x.dtype)
+
+
+@register_variant("moe_dispatch", "offload")
+def moe_dispatch_slots(x, w_router, w_gate, w_up, w_down, *, num_experts: int,
+                       k: int, capacity: int):
+    """Scatter-slot dispatch: token t's choice j lands at flat slot
+    ``gate_idx*capacity + pos_in_expert`` (overflow tokens at a dead row), so
+    the O(T*E*C) one-hot tensor never materializes.  Each slot receives at
+    most one token, so scatter-add is exact — same semantics as ``ref``."""
+    t, d = x.shape
+    probs = router_probs(x, w_router)                         # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    c = int(capacity)
+
+    onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.int32)   # [T, k, E]
+    flat = onehot.reshape(t * k, num_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat                     # [T*k, E]
+    pos_in_expert = (pos * flat).sum(-1).reshape(t, k)        # [T, k]
+    keep = pos_in_expert < c
+    slot = jnp.where(keep, gate_idx * c + pos_in_expert,
+                     num_experts * c).reshape(t * k)          # dead row at E*c
+
+    src = jnp.broadcast_to(x[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = jnp.zeros((num_experts * c + 1, d), x.dtype).at[slot].add(src)
+    xe = buf[:-1].reshape(num_experts, c, d)                  # [E, C, D]
+    ye = _expert_ffn(xe, w_gate, w_up, w_down)
+    ye_pad = jnp.concatenate([ye.reshape(num_experts * c, d),
+                              jnp.zeros((1, d), ye.dtype)])
+    y_tok = ye_pad[slot].reshape(t, k, d)                     # dropped -> 0
+    gates = (gate_vals * keep.astype(gate_vals.dtype)).astype(y_tok.dtype)
+    return (y_tok * gates[:, :, None]).sum(1).astype(x.dtype)
+
+
+@register_variant("moe_ffn", "ref")
+def moe_token_onehot(x, params, *, num_experts: int, k: int,
+                     capacity_factor: float, inner_impl=None):
+    """Token-choice top-k with one-hot dispatch.  x: [T, D].
+
+    Routes the capacity-bounded dispatch through the ``moe_dispatch``
+    family, so an offload pattern can re-route the routed block itself
+    (dense one-hot vs scatter-slot) within the token-choice strategy."""
+    from repro.core.regions import dispatch
+    c = moe_capacity(x.shape[0], num_experts, k, capacity_factor)
+    return dispatch("moe_dispatch", inner_impl, x, params["router"],
+                    params["w_gate"], params["w_up"], params["w_down"],
+                    num_experts=num_experts, k=k, capacity=c)
 
 
 @register_variant("moe_ffn", "offload")
 def moe_expert_choice(x, params, *, num_experts: int, k: int,
-                      capacity_factor: float, group_size: int = 4096):
+                      capacity_factor: float, group_size: int = 4096,
+                      inner_impl=None):
     """Group-local expert-choice routing.  x: [T, D].
 
     Tokens are split into groups of <= group_size; each expert picks its

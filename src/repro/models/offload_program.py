@@ -49,12 +49,47 @@ def make_lm_program(arch: str, batch: int = 2, seq: int = 128) -> OffloadablePro
                                   jnp.bfloat16)
         regions.append(Region("attn_core", variants("attn_core")["ref"],
                               (q, kv, kv)))
-    if full.d_ff:
+    if full.is_moe:
+        # the routed expert MLP really is a moe_dispatch block (top-k gate +
+        # capacity-bounded one-hot routing) — annotating it mlp_core would
+        # be a lie the extractor benchmark rightly punishes
+        from repro.models.moe import moe_capacity
+        e, f = full.num_experts, full.moe_d_ff or full.d_ff
+        cap = moe_capacity(s_full, e, full.experts_per_token,
+                           full.capacity_factor)
+        x = jax.ShapeDtypeStruct((s_full, full.d_model), jnp.bfloat16)
+        wr = jax.ShapeDtypeStruct((full.d_model, e), jnp.bfloat16)
+        we = jax.ShapeDtypeStruct((e, full.d_model, f), jnp.bfloat16)
+        wd = jax.ShapeDtypeStruct((e, f, full.d_model), jnp.bfloat16)
+        regions.append(Region("moe_dispatch", variants("moe_dispatch")["ref"],
+                              (x, wr, we, we, wd),
+                              static_kwargs={"num_experts": e,
+                                             "k": full.experts_per_token,
+                                             "capacity": cap}))
+    elif full.d_ff and full.family == "audio":
+        # audio archs run a gelu MLP (dot -> gelu -> dot), not swiglu
+        x = jax.ShapeDtypeStruct((s_full, full.d_model), jnp.bfloat16)
+        wu = jax.ShapeDtypeStruct((full.d_model, full.d_ff), jnp.bfloat16)
+        bu = jax.ShapeDtypeStruct((full.d_ff,), jnp.bfloat16)
+        wd = jax.ShapeDtypeStruct((full.d_ff, full.d_model), jnp.bfloat16)
+        bd = jax.ShapeDtypeStruct((full.d_model,), jnp.bfloat16)
+        regions.append(Region("mlp_gelu", variants("mlp_gelu")["ref"],
+                              (x, wu, bu, wd, bd), deploy_variant="offload"))
+    elif full.d_ff:
         x = jax.ShapeDtypeStruct((s_full, full.d_model), jnp.bfloat16)
         wg = jax.ShapeDtypeStruct((full.d_model, full.d_ff), jnp.bfloat16)
         wd = jax.ShapeDtypeStruct((full.d_ff, full.d_model), jnp.bfloat16)
         regions.append(Region("mlp_core", variants("mlp_core")["ref"],
                               (x, wg, wg, wd), deploy_variant="offload"))
+    if full.conv_stem:
+        xa = jax.ShapeDtypeStruct((1, full.frontend_seq, full.frontend_dim),
+                                  jnp.bfloat16)
+        wc = jax.ShapeDtypeStruct((3, full.frontend_dim, full.d_model),
+                                  jnp.bfloat16)
+        bc = jax.ShapeDtypeStruct((full.d_model,), jnp.bfloat16)
+        regions.append(Region("conv_stem", variants("conv_stem")["ref"],
+                              (xa, wc, bc), deploy_variant="offload",
+                              static_kwargs={"stride": 1}))
     if full.family == "ssm":
         di, n = full.d_inner, full.ssm_state
         a = jax.ShapeDtypeStruct((1, s_full, di, n), jnp.bfloat16)

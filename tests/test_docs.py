@@ -35,8 +35,8 @@ DOCUMENTED = {
                            "variants"],
     "repro.core.program": ["OffloadableProgram", "Region"],
     "repro.core.extract": ["discover", "extract", "ExtractionReport",
-                           "RegionMatch", "CandidateSite", "enumerate_sites",
-                           "FAMILIES"],
+                           "RegionMatch", "CandidateSite", "Rejection",
+                           "enumerate_sites", "FAMILIES"],
     "repro.core.intensity": ["RegionAnalysis", "analyze_region",
                              "count_loops", "alignment_penalty"],
     "repro.serving.engine": ["ServeEngine"],

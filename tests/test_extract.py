@@ -14,6 +14,41 @@ from repro.models import factory as F
 from repro.models import layers as L
 
 
+# Family -> named extractor tests, one list per polarity.  Read statically
+# by ``tools/check_patterns.py`` (CI lint): every family in
+# ``extract.FAMILIES`` must appear here with at least one positive and one
+# negative test, and each named function must exist in this module.
+COVERAGE = {
+    "attn_core": {
+        "positive": ["test_attn_core_rediscovered_with_arch_shapes"],
+        "negative": ["test_attn_f16_rejected_by_dtype_gate"]},
+    "mlp_core": {
+        "positive": ["test_mlp_core_rediscovered_with_arch_shapes"],
+        "negative": ["test_mlp_escaping_intermediate_rejected"]},
+    "ssm_scan": {
+        "positive": ["test_ssm_scan_rediscovered_with_arch_shapes"],
+        "negative": ["test_ssm_side_effect_rejected"]},
+    "rglru_scan": {
+        "positive": ["test_rglru_scan_rediscovered_with_arch_shapes"],
+        "negative": ["test_rglru_while_trip_count_rejected"]},
+    "fir_bank": {
+        "positive": ["test_fir_bank_rediscovered"],
+        "negative": ["test_fir_while_trip_count_rejected"]},
+    "rmsnorm": {
+        "positive": ["test_rmsnorm_rediscovered"],
+        "negative": ["test_rmsnorm_f16_rejected_by_dtype_gate"]},
+    "mlp_gelu": {
+        "positive": ["test_gelu_mlp_rediscovered"],
+        "negative": ["test_gelu_mlp_escaping_intermediate_rejected"]},
+    "conv_stem": {
+        "positive": ["test_conv_stem_rediscovered"],
+        "negative": ["test_dilated_conv_rejected_with_diagnostic"]},
+    "moe_dispatch": {
+        "positive": ["test_moe_dispatch_rediscovered"],
+        "negative": ["test_moe_unbounded_routing_rejected_with_diagnostic"]},
+}
+
+
 def _trace_arch(arch: str, seq: int = 32):
     cfg = get_config(arch).reduced()
     params = F.init_params(cfg, jax.random.PRNGKey(0))
@@ -266,6 +301,197 @@ def test_discovered_lm_substitution_matches_reference(recgemma):
     sub = np.asarray(prog.build(mixed)(*args), np.float32)
     scale = float(np.max(np.abs(ref))) + 1e-9
     assert float(np.max(np.abs(ref - sub))) / scale < 5e-2
+
+
+# ---------------------------------------------------------------------------
+# New function-block recognizers: gelu-MLP, conv stem, MoE dispatch
+# ---------------------------------------------------------------------------
+def _gelu_mlp_fn(x, wu, bu, wd, bd):
+    h = x @ wu + bu
+    return jax.nn.gelu(h, approximate=True) @ wd + bd
+
+
+def _gelu_mlp_args(dtype=jnp.bfloat16):
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 5)
+    return (jax.random.normal(ks[0], (32, 64), dtype),
+            jax.random.normal(ks[1], (64, 128), dtype),
+            jax.random.normal(ks[2], (128,), dtype),
+            jax.random.normal(ks[3], (128, 64), dtype),
+            jax.random.normal(ks[4], (64,), dtype))
+
+
+def test_gelu_mlp_rediscovered():
+    args = _gelu_mlp_args()
+    report = E.extract(_gelu_mlp_fn, args, name="gelu_mlp")
+    hits = _legal(report, "mlp_gelu")
+    assert hits, report.summary()
+    x, wu, bu, wd, bd = hits[0].invars
+    assert E._shape(wu) == (64, 128) and E._shape(bu) == (128,)
+    assert E._shape(wd) == (128, 64) and E._shape(bd) == (64,)
+    assert E._shape(x) == (32, 64)
+
+
+def test_gelu_mlp_escaping_intermediate_rejected():
+    """Returning the gelu activation alongside the MLP output makes a
+    covered intermediate escape — recognized but never legal, and the
+    report carries a structured legality rejection for it."""
+    def leaky(x, wu, bu, wd, bd):
+        g = jax.nn.gelu(x @ wu + bu, approximate=True)
+        return g @ wd + bd, g
+
+    report = E.extract(leaky, _gelu_mlp_args(), name="gelu_leak")
+    matches = [m for m in report.matches if m.family == "mlp_gelu"]
+    assert matches, report.summary()
+    assert not matches[0].legal
+    rejs = [r for r in report.rejections
+            if r.family == "mlp_gelu" and r.stage == "legality"]
+    assert rejs and rejs[0].reason == matches[0].reason
+
+
+def _stem_fn(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(2,), padding="SAME",
+        dimension_numbers=("NHC", "HIO", "NHC"))
+    return jax.nn.gelu(y + b, approximate=True)
+
+
+def _stem_args(dtype=jnp.bfloat16):
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 3)
+    return (jax.random.normal(ks[0], (1, 64, 8), dtype),
+            jax.random.normal(ks[1], (3, 8, 16), dtype),
+            jax.random.normal(ks[2], (16,), dtype))
+
+
+def test_conv_stem_rediscovered():
+    report = E.extract(_stem_fn, _stem_args(), name="stem")
+    hits = _legal(report, "conv_stem")
+    assert hits, report.summary()
+    x, w, b = hits[0].invars
+    assert E._shape(x) == (1, 64, 8)
+    assert E._shape(w) == (3, 8, 16) and E._shape(b) == (16,)
+    assert hits[0].static_kwargs["stride"] == 2
+
+
+def test_dilated_conv_rejected_with_diagnostic():
+    """A dilated conv is recognized as a near-miss, not silently skipped:
+    the report carries a structured Rejection naming the primitive and the
+    dilation that disqualified it."""
+    def dilated(x, w, b):
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1,), padding="SAME",
+            rhs_dilation=(2,), dimension_numbers=("NHC", "HIO", "NHC"))
+        return jax.nn.gelu(y + b, approximate=True)
+
+    report = E.extract(dilated, _stem_args(), name="stem_dilated")
+    assert not [m for m in report.matches if m.family == "conv_stem"]
+    rejs = [r for r in report.rejections if r.family == "conv_stem"]
+    assert rejs, report.summary()
+    assert rejs[0].stage == "recognizer"
+    assert rejs[0].primitive == "conv_general_dilated"
+    assert "dilat" in rejs[0].reason
+    assert rejs[0].reason in report.summary()
+
+
+def _moe_args(dtype=jnp.bfloat16):
+    k = jax.random.PRNGKey(2)
+    ks = jax.random.split(k, 5)
+    return (jax.random.normal(ks[0], (32, 16), dtype),
+            jax.random.normal(ks[1], (16, 4), dtype),
+            jax.random.normal(ks[2], (4, 16, 32), dtype),
+            jax.random.normal(ks[3], (4, 16, 32), dtype),
+            jax.random.normal(ks[4], (4, 32, 16), dtype))
+
+
+def test_moe_dispatch_rediscovered():
+    from repro.models import moe as M
+
+    def fn(x, wr, wg, wu, wd):
+        return M.moe_dispatch_dense(x, wr, wg, wu, wd,
+                                    num_experts=4, k=2, capacity=8)
+
+    report = E.extract(fn, _moe_args(), name="moe")
+    hits = _legal(report, "moe_dispatch")
+    assert hits, report.summary()
+    assert hits[0].static_kwargs["num_experts"] == 4
+    assert hits[0].static_kwargs["k"] == 2
+    assert hits[0].static_kwargs["capacity"] == 8
+
+
+def test_moe_unbounded_routing_rejected_with_diagnostic():
+    """Token-choice routing with no capacity bound is data-dependent: every
+    routed token flows to its expert, so the per-expert queue has no static
+    size.  The recognizer walks the whole block and rejects at the capacity
+    gate with a structured reason."""
+    def unbounded(x, wr, wg, wu, wd):
+        probs = jax.nn.softmax((x @ wr).astype(jnp.float32))
+        gate_vals, gate_idx = jax.lax.top_k(probs, 2)
+        disp = jax.nn.one_hot(gate_idx, 4, dtype=x.dtype)        # [T, k, E]
+        comb = (disp * gate_vals[..., None].astype(x.dtype)).sum(1)
+        xe = jnp.einsum("te,td->etd", disp.sum(1), x)            # no capacity
+        h = jax.nn.silu(jnp.einsum("etd,edf->etf", xe, wg)) * jnp.einsum(
+            "etd,edf->etf", xe, wu)
+        ye = jnp.einsum("etf,efd->etd", h, wd)
+        return jnp.einsum("etd,te->td", ye, comb)
+
+    report = E.extract(unbounded, _moe_args(), name="moe_unbounded")
+    assert not [m for m in report.matches if m.family == "moe_dispatch"]
+    rejs = [r for r in report.rejections if r.family == "moe_dispatch"]
+    assert rejs, report.summary()
+    assert rejs[0].stage == "recognizer"
+    assert "data-dependent" in rejs[0].reason
+    assert "capacity" in rejs[0].reason
+
+
+# ---------------------------------------------------------------------------
+# Region stitching: adjacent legal matches fuse; escaping boundaries don't
+# ---------------------------------------------------------------------------
+def _norm_mlp_fn(x, w, wu, bu, wd, bd):
+    return _gelu_mlp_fn(L.rms_norm(x, w, 1e-6), wu, bu, wd, bd)
+
+
+def _norm_mlp_args():
+    k = jax.random.PRNGKey(3)
+    w = jnp.ones((64,), jnp.bfloat16)
+    x, wu, bu, wd, bd = _gelu_mlp_args()
+    return (x, w, wu, bu, wd, bd)
+
+
+def test_stitched_pair_discovered_and_faithful():
+    """rmsnorm feeding a gelu-MLP fuses into a single offloadable region;
+    the fused build matches the reference numerically."""
+    args = _norm_mlp_args()
+    report = E.extract(_norm_mlp_fn, args, name="norm_mlp")
+    fused = _legal(report, "rmsnorm+mlp_gelu")
+    assert fused, report.summary()
+    # the fused slice covers both halves' equations
+    halves = (_legal(report, "rmsnorm") + _legal(report, "mlp_gelu"))
+    assert len(fused[0].covered) == sum(len(m.covered) for m in halves)
+
+    prog = E.discover(_norm_mlp_fn, args, name="norm_mlp")
+    assert "rmsnorm+mlp_gelu" in [r.name for r in prog.regions]
+    ref = np.asarray(_norm_mlp_fn(*args), np.float32)
+    got = np.asarray(prog.build(Impl())(*args), np.float32)
+    scale = float(np.max(np.abs(ref))) + 1e-9
+    assert float(np.max(np.abs(ref - got))) / scale < 5e-2
+
+
+def test_stitch_rejected_when_boundary_escapes():
+    """If the value crossing the seam is also a program output, fusing
+    would hide it — the stitcher refuses and reports stage='stitch'."""
+    def leaky(x, w, wu, bu, wd, bd):
+        y = L.rms_norm(x, w, 1e-6)
+        return _gelu_mlp_fn(y, wu, bu, wd, bd), y
+
+    report = E.extract(leaky, _norm_mlp_args(), name="norm_mlp_leak")
+    # both halves stay individually legal ...
+    assert _legal(report, "rmsnorm") and _legal(report, "mlp_gelu")
+    # ... but no fused region is offered
+    assert not [m for m in report.legal_matches if "+" in m.family]
+    rejs = [r for r in report.rejections if r.stage == "stitch"]
+    assert rejs, report.summary()
+    assert "boundary value escapes" in rejs[0].reason
 
 
 def test_region_analysis_feeds_intensity():

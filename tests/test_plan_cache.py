@@ -225,3 +225,74 @@ def test_resolve_cache_forms():
     assert resolve_cache(None) is None
     pc = PlanCache("unused.json")
     assert resolve_cache(pc) is pc
+
+
+# ---------------------------------------------------------------------------
+# Calibrated cost-model state persists next to the measurements
+# ---------------------------------------------------------------------------
+def test_cost_model_state_round_trip():
+    """export_state -> JSON -> load_state reproduces predictions exactly,
+    including the sticky pairwise interaction corrections."""
+    from repro.core.cost_model import CostModel
+    from repro.core.regions import Impl
+
+    state = {"base": 0.5,
+             "delta": [["r1", "offload", -0.2], ["r2", "fast", -0.1]],
+             "pair_corr": [[["r1", "offload"], ["r2", "fast"], 0.05]]}
+    m = CostModel(candidates=[])
+    assert m.load_state(json.loads(json.dumps(state)))
+    assert m.export_state() == state
+    assert m.predict(Impl()) == pytest.approx(0.5)
+    assert m.predict(Impl({"r1": "offload"})) == pytest.approx(0.3)
+    # both genes present -> additive deltas plus the pair correction
+    assert m.predict(Impl({"r1": "offload", "r2": "fast"})) == pytest.approx(
+        0.5 - 0.2 - 0.1 + 0.05)
+    # a second round-trip is a fixed point
+    m2 = CostModel(candidates=[])
+    assert m2.load_state(m.export_state())
+    assert m2.export_state() == m.export_state()
+
+
+def test_cost_model_load_state_tolerates_garbage():
+    from repro.core.cost_model import CostModel
+    m = CostModel(candidates=[])
+    assert not m.load_state(None)
+    assert not m.load_state({})
+    assert not m.load_state({"base": "fast", "delta": [["too-short"]],
+                             "pair_corr": [[1, 2, 3]]})
+
+
+def test_planner_persists_and_reloads_cost_model_state(tmp_path):
+    """plan() stores the calibrated deltas in the cache entry; a later
+    search under the same measurement conditions starts from them (state
+    donated by measurement_key, like the measurements themselves)."""
+    from repro.core.plan_cache import measurement_cache_key
+
+    prog, a, b = _two_region_program()
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    planner = AutoOffloader(PlannerConfig(max_measurements=6, reps=2,
+                                          warmup=0))
+    rep1 = planner.plan(prog, jax.random.PRNGKey(0), cache=cache)
+    entry = cache.get(rep1.cache_key)
+    assert entry["cost_model"]["base"] > 0.0
+    assert entry["cost_model"]["delta"]          # calibrated gene deltas
+    # survives the file round-trip, served by measurement key
+    mkey = entry["measurement_key"]
+    assert mkey == measurement_cache_key(prog)
+    assert PlanCache(path).cost_model_for(mkey) == entry["cost_model"]
+    assert PlanCache(path).cost_model_for("nope") == {}
+
+    # a pre-seeded delta for a gene this search never measures flows
+    # through load -> calibrate -> export untouched: proof the planner
+    # actually loads persisted state instead of starting from the seeds
+    ghost = [["ghost_region", "offload", 123.0]]
+    cache.put("seeded", {"measurement_key": mkey, "best_pattern": {},
+                         "speedup": 1.0, "created_at": 9e9,
+                         "cost_model": {"base": 0.0, "delta": ghost,
+                                        "pair_corr": []}})
+    rep2 = AutoOffloader(PlannerConfig(max_measurements=2, reps=1,
+                                       warmup=0)).plan(
+        prog, jax.random.PRNGKey(1), cache=cache)
+    assert not rep2.from_cache                   # different budget, new key
+    assert ghost[0] in rep2.cost_model_state["delta"]

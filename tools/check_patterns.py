@@ -14,6 +14,14 @@
    ``sys.path`` at import time — those hacks mask broken packaging and
    break when files move.
 
+3. Recognizer coverage: every extractor family in
+   ``core/extract.py::FAMILIES`` must map to a ``_match_*`` recognizer in
+   ``RECOGNIZERS`` *and* declare at least one positive and one negative
+   test in ``tests/test_extract.py::COVERAGE`` whose named test functions
+   actually exist.  A family added to the registry without a recognizer or
+   without both test polarities fails CI before it can silently ship with
+   0.0 recall.
+
 AST-based (comments and strings can mention the patterns freely).
 Exit 0 when clean, 1 with one line per violation otherwise.
 """
@@ -66,6 +74,79 @@ def _check_file(path: Path, patterns: set[str]) -> list[str]:
     return out
 
 
+EXTRACT_PY = "src/repro/core/extract.py"
+EXTRACT_TESTS = "tests/test_extract.py"
+
+
+def _top_level_value(tree: ast.Module, name: str):
+    """The AST node assigned to a module-level ``name = ...``, or None."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    return node.value
+    return None
+
+
+def check_recognizer_coverage() -> list[str]:
+    """Families -> recognizers -> tests, checked statically."""
+    out = []
+    epath, tpath = ROOT / EXTRACT_PY, ROOT / EXTRACT_TESTS
+    etree = ast.parse(epath.read_text(), filename=str(epath))
+    ttree = ast.parse(tpath.read_text(), filename=str(tpath))
+
+    fam_node = _top_level_value(etree, "FAMILIES")
+    rec_node = _top_level_value(etree, "RECOGNIZERS")
+    if fam_node is None or rec_node is None:
+        return [f"{EXTRACT_PY}: FAMILIES or RECOGNIZERS table missing"]
+    try:
+        families = list(ast.literal_eval(fam_node))
+    except ValueError:
+        return [f"{EXTRACT_PY}: FAMILIES is not a literal tuple"]
+    recognizers = {}
+    for k, v in zip(rec_node.keys, rec_node.values):
+        if isinstance(k, ast.Constant) and isinstance(v, ast.Name):
+            recognizers[k.value] = v.id
+    funcs = {n.name for n in ast.walk(etree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    test_funcs = {n.name for n in ast.walk(ttree)
+                  if isinstance(n, ast.FunctionDef)}
+    cov_node = _top_level_value(ttree, "COVERAGE")
+    try:
+        coverage = ast.literal_eval(cov_node) if cov_node is not None else None
+    except ValueError:
+        coverage = None
+    if not isinstance(coverage, dict):
+        out.append(f"{EXTRACT_TESTS}: COVERAGE dict missing (families must "
+                   "declare their positive/negative extractor tests)")
+        coverage = {}
+
+    for fam in families:
+        rec = recognizers.get(fam)
+        if rec is None:
+            out.append(f"{EXTRACT_PY}: family {fam!r} has no RECOGNIZERS "
+                       "entry (add a _match_* recognizer)")
+        elif not rec.startswith("_match_") or rec not in funcs:
+            out.append(f"{EXTRACT_PY}: family {fam!r} maps to {rec!r}, "
+                       "which is not a _match_* function defined there")
+        entry = coverage.get(fam, {})
+        for polarity in ("positive", "negative"):
+            names = entry.get(polarity, ()) if isinstance(entry, dict) else ()
+            if not names:
+                out.append(f"{EXTRACT_TESTS}: family {fam!r} has no "
+                           f"{polarity} case in COVERAGE")
+                continue
+            for name in names:
+                if name not in test_funcs:
+                    out.append(f"{EXTRACT_TESTS}: COVERAGE names {name!r} "
+                               f"for {fam!r} but no such test exists")
+    for fam in coverage:
+        if fam not in families:
+            out.append(f"{EXTRACT_TESTS}: COVERAGE lists unknown family "
+                       f"{fam!r} (stale entry?)")
+    return out
+
+
 def main() -> int:
     violations = []
     for tree in TIME_TIME_TREES:
@@ -74,6 +155,7 @@ def main() -> int:
     for tree in SYS_PATH_TREES:
         for path in sorted((ROOT / tree).rglob("*.py")):
             violations += _check_file(path, {"sys.path.insert"})
+    violations += check_recognizer_coverage()
     for v in violations:
         print(v)
     if violations:
