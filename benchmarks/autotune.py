@@ -1,0 +1,294 @@
+"""Kernel autotuning: searching (variant, tile params) genes vs the
+variant-only search at equal budget.
+
+PR 8 widens the Step-4 genome: a variant that declared a ``TuningSpace`` at
+registration (``register_variant(..., tuning=...)``) contributes every valid
+tile point as an allele, the staged heuristic grows a round-4 hill climb
+over the winner's tiles, the GA neighbor-steps tile params, and exhaustive
+enumerates the full (variant, tile) product.  This section proves the
+claims the design hangs on, on the two paper apps the tuning targets
+(tdFIR's ``fir_bank=pallas`` block_n/tap_unroll and the serving decode-
+attention kernel's block_k):
+
+* **tuned >= fixed at equal budget** — for each app, the SAME strategy is
+  planned with ``tune_tiles`` off (the pre-PR-8 variant-only genome) and on,
+  at the same ``d``: the tuned winner's measured median must be no slower
+  than the fixed winner's (5% timing-noise tolerance).  tdFIR uses
+  ``staged`` (rounds 1-3 are bit-identical in both runs; round 4 is purely
+  additive and only ever moves to an improving tile point), decode uses
+  ``exhaustive`` (the tuned space is a superset containing the fixed
+  point, and small enough that ``d`` covers it).
+* **surrogate < exhaustive real measurements** — both tuned at the same
+  ``d`` on tdFIR (whose tuned space is far larger than any budget): the
+  surrogate's CostModel scores the tile points and spends at most ``d-1``
+  real measurements, while exhaustive tile search burns the full ``d``.
+* **winner independent of verify_workers** — the tuned decode plan at
+  ``verify_workers`` 1 vs 2 must measure the same pattern sequence and
+  select the same ``Impl`` (one retry absorbs shared-host timing flips,
+  exactly as in benchmarks/verification.py).
+* **warm re-plan over a tuned cache entry costs zero budget** — an
+  identical tuned re-plan against a fresh ``PlanCache`` is a pure cache
+  hit, and a re-opened search (changed budget) is primed with the persisted
+  tile-point measurements.
+
+With ``--json PATH`` the rows land in a ``BENCH_autotune.json`` document
+(``{"section": "autotune", ...}``) for the CI perf trajectory
+(``benchmarks/trend.py`` matches rows on ``app``+``mode``).
+
+Run:  PYTHONPATH=src python -m benchmarks.autotune [--budget 8] [--json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels.ops  # noqa: F401 — registers the decode_attn variants
+from repro.apps import tdfir
+from repro.core.plan_cache import PlanCache
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, split_gene, variants
+from repro.core.search import impl_key
+
+DECODE = dict(b=2, hq=8, hkv=2, s=512, d=64)
+
+
+def make_decode_program() -> OffloadableProgram:
+    """Single-region decode-attention app at serving shapes: one query step
+    against a [B, Hkv, S, D] KV cache (GQA 8:2), every slot valid.  The
+    ``ref`` variant is the dense masked-softmax oracle registered in
+    kernels/ops.py; ``pallas`` streams the cache in block_k tiles — the
+    knob the TuningSpace exposes."""
+    b, hq, hkv, s, d = (DECODE[k] for k in ("b", "hq", "hkv", "s", "d"))
+    q_abs = jax.ShapeDtypeStruct((b, hq, 1, d), jnp.float32)
+    kv_abs = jax.ShapeDtypeStruct((b, hkv, s, d), jnp.float32)
+    sp_abs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    cp_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def build(impl):
+        def run(q, k, v, sp, cp):
+            return dispatch("decode_attn", impl, q, k, v, sp, cp)
+        return run
+
+    def sample(key):
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (b, hq, 1, d), jnp.float32)
+        k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+        v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32)
+        sp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        cp = jnp.full((b,), s - 1, jnp.int32)
+        return q, k, v, sp, cp
+
+    regions = [Region("decode_attn", variants("decode_attn")["ref"],
+                      (q_abs, kv_abs, kv_abs, sp_abs, cp_abs),
+                      measure_variant="pallas")]
+    return OffloadableProgram(
+        name="decode-attn-bench", regions=regions, build=build,
+        sample_inputs=sample, source_loop_count=1,
+        description="decode attention against a full KV cache (autotune)")
+
+
+APPS = (
+    # (app, program factory, strategy for the fixed-vs-tuned comparison)
+    ("tdfir", tdfir.make_program, "staged"),
+    ("decode_attn", make_decode_program, "exhaustive"),
+)
+
+
+def _n_tile_patterns(rep) -> int:
+    """Measured patterns carrying at least one non-default tile-param gene."""
+    n = 0
+    for m in list(rep.measurements) + list(rep.reused):
+        if any(split_gene(v)[1] for v in m.mapping().values()):
+            n += 1
+    return n
+
+
+def plan_once(make, *, tune: bool, strategy: str, budget: int, reps: int,
+              seed: int = 0, workers: int = 1, cache=None):
+    cfg = PlannerConfig(max_measurements=budget, reps=reps, strategy=strategy,
+                        seed=seed, verify_workers=workers, tune_tiles=tune)
+    return AutoOffloader(cfg).plan(make(), jax.random.PRNGKey(0), cache=cache)
+
+
+def row_from(app: str, mode: str, rep, budget: int) -> dict:
+    return {
+        "app": app,
+        "mode": mode,                       # fixed | tuned | surrogate | ...
+        "strategy": rep.strategy,
+        "budget": budget,
+        "n_measured": len(rep.measurements),
+        "n_tile_patterns": _n_tile_patterns(rep),
+        "search_space": rep.search_space,
+        "baseline_ms": rep.baseline.run_seconds * 1e3,
+        "best_ms": rep.best_seconds * 1e3,
+        "speedup": rep.speedup,
+        "best_pattern": Impl(rep.best_pattern).describe() or "all-ref",
+    }
+
+
+def run(budget: int = 8, reps: int = 2, seed: int = 0) -> list[dict]:
+    rows = []
+    for app, make, strat in APPS:
+        # fixed and tuned are separate timed runs: one retry separates "the
+        # tuned genome selected a slower winner" (deterministic, repeats)
+        # from shared-host timing noise (won't) — same idiom as
+        # benchmarks/verification.py
+        for attempt in range(2):
+            fixed = plan_once(make, tune=False, strategy=strat, budget=budget,
+                              reps=reps, seed=seed)
+            tuned = plan_once(make, tune=True, strategy=strat, budget=budget,
+                              reps=reps, seed=seed)
+            if tuned.best_seconds <= fixed.best_seconds * 1.05:
+                break
+            print(f"# {app}: tuned winner measured slower than fixed — "
+                  f"retrying once (shared-host timing noise)")
+        rows.append(row_from(app, "fixed", fixed, budget))
+        rows.append(row_from(app, "tuned", tuned, budget))
+    # surrogate vs exhaustive tile search, both tuned, same budget — on
+    # tdFIR, whose tuned space dwarfs the budget (so exhaustive burns all
+    # of d while the surrogate's model scores the rest)
+    surr = plan_once(tdfir.make_program, tune=True, strategy="surrogate",
+                     budget=budget, reps=reps, seed=seed)
+    exh = plan_once(tdfir.make_program, tune=True, strategy="exhaustive",
+                    budget=budget, reps=reps, seed=seed)
+    rows.append(row_from("tdfir", "tuned-surrogate", surr, budget))
+    rows.append(row_from("tdfir", "tuned-exhaustive", exh, budget))
+    return rows
+
+
+def workers_determinism(budget: int, reps: int) -> dict:
+    """The tuned decode plan at verify_workers 1 vs 2: identical measured
+    pattern sequence (a hard invariant — exhaustive proposals never depend
+    on timings) and identical selected Impl (one retry absorbs noise)."""
+    for attempt in range(2):
+        reports = [plan_once(make_decode_program, tune=True,
+                             strategy="exhaustive", budget=budget, reps=reps,
+                             workers=w) for w in (1, 2)]
+        seqs = [[m.pattern for m in r.measurements] for r in reports]
+        assert seqs[0] == seqs[1], (
+            f"tuned measured sequence diverged across verify_workers:\n"
+            f"  w=1 {seqs[0]}\n  w=2 {seqs[1]}")
+        keys = [impl_key(Impl(r.best_pattern)) for r in reports]
+        if keys[0] == keys[1]:
+            break
+        print("# tuned winner flipped across verify_workers runs — "
+              "retrying once (shared-host timing noise)")
+    assert keys[0] == keys[1], (
+        f"tuned winner diverged across verify_workers: "
+        f"{reports[0].best_pattern} vs {reports[1].best_pattern}")
+    return {"patterns": seqs[0],
+            "winner": Impl(reports[0].best_pattern).describe() or "all-ref"}
+
+
+def warm_cache_demo(budget: int, reps: int) -> dict:
+    """Tuned plans persist like any other: an identical tuned re-plan is a
+    zero-measurement cache hit, and a re-opened tuned search (changed
+    budget) is primed with the persisted tile-point measurements."""
+    with tempfile.TemporaryDirectory() as d:
+        cache = PlanCache(os.path.join(d, "plans.json"))
+        cold = plan_once(make_decode_program, tune=True,
+                         strategy="exhaustive", budget=budget, reps=reps,
+                         cache=cache)
+        hot = plan_once(make_decode_program, tune=True,
+                        strategy="exhaustive", budget=budget, reps=reps,
+                        cache=cache)
+        reopened = plan_once(make_decode_program, tune=True,
+                             strategy="exhaustive", budget=budget + 2,
+                             reps=reps, cache=cache)
+        return {
+            "cold_measured": len(cold.measurements),
+            "cold_tile_patterns": _n_tile_patterns(cold),
+            "hot_from_cache": hot.from_cache,
+            "hot_measured": len(hot.measurements),
+            "reopened_measured": len(reopened.measurements),
+            "reopened_reused": len(reopened.reused),
+        }
+
+
+def main(budget: int = 8, reps: int = 2, seed: int = 0,
+         json_path: str | None = None) -> list[dict]:
+    rows = run(budget=budget, reps=reps, seed=seed)
+    by = {(r["app"], r["mode"]): r for r in rows}
+    print("app,mode,strategy,budget,measured,tile_patterns,space,"
+          "baseline_ms,best_ms,speedup,pattern")
+    for r in rows:
+        print(f"{r['app']},{r['mode']},{r['strategy']},{r['budget']},"
+              f"{r['n_measured']},{r['n_tile_patterns']},{r['search_space']},"
+              f"{r['baseline_ms']:.2f},{r['best_ms']:.2f},{r['speedup']:.2f},"
+              f"{r['best_pattern']}")
+
+    # -- claim 1: tuned winner no slower than the fixed winner, equal d --
+    for app, _, strat in APPS:
+        fixed, tuned = by[(app, "fixed")], by[(app, "tuned")]
+        verdict = "<=" if tuned["best_ms"] <= fixed["best_ms"] * 1.05 else ">"
+        print(f"# {app} [{strat}]: tuned best {tuned['best_ms']:.2f} ms "
+              f"{verdict} fixed best {fixed['best_ms']:.2f} ms at "
+              f"d={fixed['budget']} (tuned space {tuned['search_space']} "
+              f"vs {fixed['search_space']}; {tuned['n_tile_patterns']} tile "
+              f"patterns measured)")
+        assert tuned["best_ms"] <= fixed["best_ms"] * 1.05, (
+            f"{app}: tuned winner {tuned['best_ms']:.2f} ms slower than the "
+            f"fixed-default winner {fixed['best_ms']:.2f} ms at equal budget")
+        assert tuned["search_space"] > fixed["search_space"], (
+            f"{app}: tune_tiles did not widen the search space "
+            f"({tuned['search_space']} vs {fixed['search_space']}) — are the "
+            f"TuningSpace registrations gone?")
+
+    # -- claim 2: surrogate tuning spends strictly fewer real measurements
+    #    than exhaustive tile search (when the space forces exhaustive to
+    #    burn the full budget) --
+    surr = by[("tdfir", "tuned-surrogate")]
+    exh = by[("tdfir", "tuned-exhaustive")]
+    print(f"# tdfir tuned: surrogate spent {surr['n_measured']} real "
+          f"measurements vs exhaustive {exh['n_measured']} at d={budget} "
+          f"(space {exh['search_space']})")
+    if exh["n_measured"] >= budget:
+        assert surr["n_measured"] < exh["n_measured"], (
+            f"surrogate tuning spent {surr['n_measured']} real measurements,"
+            f" exhaustive {exh['n_measured']} — the surrogate must spend "
+            f"strictly fewer at equal budget")
+
+    # -- claim 3: the tuned winner is independent of verify_workers --
+    det = workers_determinism(budget=budget, reps=reps)
+    print(f"# decode_attn tuned winner at verify_workers 1 == 2: "
+          f"{det['winner']} over {len(det['patterns'])} measured patterns")
+
+    # -- claim 4: warm re-plan over a tuned cache entry costs zero budget --
+    demo = warm_cache_demo(budget=budget, reps=max(1, reps - 1))
+    print(f"# tuned warm cache: cold measured {demo['cold_measured']} "
+          f"({demo['cold_tile_patterns']} tile patterns); identical re-plan "
+          f"from_cache={demo['hot_from_cache']} measured "
+          f"{demo['hot_measured']}; re-opened (d+2) measured "
+          f"{demo['reopened_measured']} reused {demo['reopened_reused']}")
+    assert demo["hot_from_cache"] and demo["hot_measured"] == 0, \
+        "identical tuned re-plan must be a zero-measurement cache hit"
+
+    if json_path:
+        doc = {"section": "autotune",
+               "backend": jax.default_backend(),
+               "budget": budget,
+               "workers_determinism": det,
+               "warm_cache": demo,
+               "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=8,
+                    help="d, shared by the fixed and tuned runs")
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a BENCH_autotune.json document here")
+    a = ap.parse_args()
+    main(budget=a.budget, reps=a.reps, seed=a.seed, json_path=a.json)

@@ -5,6 +5,7 @@
   extraction    static extractor precision/recall vs annotated archs +
                 discover()-driven auto-planning of unannotated programs
   strategies    staged vs genetic vs exhaustive Step-4 search at equal budget
+  autotune      tile-parameter autotuning: tuned vs fixed genome at equal d
   verification  serial vs pipelined pattern verification (core/executor.py)
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
   roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
@@ -26,8 +27,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig4", "conditions", "extraction",
-                             "strategies", "verification", "kernels",
-                             "roofline"])
+                             "strategies", "autotune", "verification",
+                             "kernels", "roofline"])
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json next to the cwd for the "
                          "sections that support it")
@@ -57,6 +58,13 @@ def main() -> None:
         strategies.main(
             budget=args.budget, reps=args.reps,
             json_path="BENCH_strategies.json" if args.json else None)
+        print()
+    if args.section in ("all", "autotune"):
+        print("== kernel autotuning (tuned vs fixed tile genome) ==")
+        from benchmarks import autotune
+        autotune.main(
+            budget=max(args.budget, 8), reps=min(args.reps, 2),
+            json_path="BENCH_autotune.json" if args.json else None)
         print()
     if args.section in ("all", "verification"):
         print("== pipelined pattern verification (serial vs concurrent AOT) ==")

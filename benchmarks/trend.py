@@ -43,6 +43,7 @@ SECTION_KEYS = {
     "conditions": ("app",),
     "verification": ("app", "workers", "cached_replan"),
     "extraction": ("app",),
+    "autotune": ("app", "mode"),
 }
 # metric -> direction: +1 higher is better, -1 lower is better, 0 report-only
 METRICS = {
@@ -55,6 +56,9 @@ METRICS = {
     "compile_ms_total": 0,
     "verify_wall_s": 0,
     "compile_wall_s": 0,
+    # autotune section: genome-space accounting, recorded but never gating
+    "n_tile_patterns": 0,
+    "search_space": 0,
     # extraction section: accuracy counts and plan_speedup are recorded for
     # the trajectory but never gate (CPU-runner plan timings are too noisy)
     "tp": 0,

@@ -24,12 +24,17 @@ ap.add_argument("--strategy", default="staged", choices=list(STRATEGY_NAMES),
                      "surrogate = roofline-predicted fitness, auto = pick "
                      "by space size — see docs/search-strategies.md")
 ap.add_argument("--seed", type=int, default=0, help="strategy RNG seed (GA)")
+ap.add_argument("--tune-tiles", action="store_true",
+                help="search (variant, tile params) genes for variants "
+                     "declaring a TuningSpace — docs/search-strategies.md "
+                     "'Kernel autotuning'; part of the plan-cache key")
 args = ap.parse_args()
 
 print("=== MRI-Q automatic offload (paper app #2) ===")
 program = make_program()
 report = AutoOffloader(
-    PlannerConfig(reps=5, strategy=args.strategy, seed=args.seed)).plan(
+    PlannerConfig(reps=5, strategy=args.strategy, seed=args.seed,
+                  tune_tiles=args.tune_tiles)).plan(
     program, cache=PlanCache.default())
 print(report.summary())
 

@@ -30,12 +30,19 @@ def main() -> None:
                          "= pick by space size")
     ap.add_argument("--seed", type=int, default=0,
                     help="strategy RNG seed (GA)")
+    ap.add_argument("--tune-tiles", action="store_true",
+                    help="search (variant, tile params) genes for variants "
+                         "declaring a TuningSpace (attn_core/ssm_scan/"
+                         "rglru_scan block sizes) — "
+                         "docs/search-strategies.md 'Kernel autotuning'; "
+                         "part of the plan-cache key")
     args = ap.parse_args()
     prog = make_lm_program(args.arch)
     cache = None if args.no_cache else PlanCache.default()
     report = AutoOffloader(PlannerConfig(reps=3, strategy=args.strategy,
-                                         seed=args.seed)).plan(prog,
-                                                               cache=cache)
+                                         seed=args.seed,
+                                         tune_tiles=args.tune_tiles)).plan(
+        prog, cache=cache)
     print(report.summary())
     print("\nDeploy mapping: selected measure-variants correspond to Pallas "
           "kernels on TPU (attn_core->flash_attention, ssm_scan->ssm_scan, "

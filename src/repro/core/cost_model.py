@@ -43,6 +43,19 @@ workload the prediction error is non-increasing as observations accumulate.
 The model is deliberately deterministic: no RNG, no clock — identical
 inputs give identical predictions, so surrogate searches stay reproducible
 from ``PlannerConfig.seed``.
+
+Tile-parameter genes
+--------------------
+When the genome carries tile params (``(variant, params)`` genes — the
+paper's loop-resizing knobs made search genes), the delta of a tuned gene
+seeds from its base variant's delta plus a deterministic tile adjustment:
+a grid-occupancy term (smaller blocks → more grid steps → more per-step
+overhead), an unroll instruction-count term (lower unroll → more loop
+control per element), and a VMEM-pressure knee (tile footprints pushing
+the region's resource fraction past ``VMEM_KNEE`` pay a growing penalty).
+Each tuned gene then calibrates online exactly like a bare gene, so the
+surrogate prunes most of a tile grid from the seeds and pins the few
+points it actually measures.
 """
 from __future__ import annotations
 
@@ -50,6 +63,7 @@ import itertools
 from dataclasses import dataclass, field
 
 from repro.core.intensity import TRANSCENDENTAL_WEIGHT
+from repro.core.regions import canonical_gene, gene_variant, tuning_space
 
 # Accelerator-side seeds (TPU v5e class) — numerically the same figures as
 # repro/launch/constants.py, restated here rather than imported: core must
@@ -90,6 +104,19 @@ HOST_SHARE = 0.9
 BIAS_STREAK = 3
 BIAS_REL_DEADBAND = 0.01
 
+# Tile-adjustment seeds (replaced by online calibration like every other
+# delta).  GRID_STEP_OVERHEAD is the per-extra-grid-step dispatch cost a
+# smaller block buys; UNROLL_OVERHEAD the fraction of a region's
+# accelerator time attributed to loop control at unroll=default (scaled by
+# how much less/more unrolled the point is); the VMEM knee penalizes tile
+# footprints that push a region's resource fraction past VMEM_KNEE of the
+# budget (double buffering stops fitting — the paper's resource-envelope
+# constraint, soft here because kernels clamp instead of failing).
+GRID_STEP_OVERHEAD = 2e-6
+UNROLL_OVERHEAD = 0.05
+VMEM_KNEE = 0.5
+VMEM_PRESSURE = 0.5
+
 
 def _trailing_streak(resid: list) -> int:
     """Length of the trailing same-sign run (deadband residuals break it)."""
@@ -105,8 +132,27 @@ def _trailing_streak(resid: list) -> int:
 
 
 def _impl_genes(impl) -> tuple:
-    """Non-ref genes of an offload pattern, canonically ordered."""
-    return tuple(sorted((r, v) for r, v in dict(impl).items() if v != "ref"))
+    """Non-ref genes of an offload pattern, canonically ordered.  Genes are
+    canonicalized (default tile params drop to the bare variant) so the
+    model and the measurement ledger agree on gene identity."""
+    return tuple(sorted((r, canonical_gene(r, v))
+                        for r, v in dict(impl).items()
+                        if gene_variant(v) != "ref"))
+
+
+def _gene_base(g) -> tuple:
+    """The (region, variant_name) base of a gene — tile params stripped.
+    Pairwise interaction terms key on this: whether two regions fuse badly
+    does not depend on which tile point either one runs."""
+    r, v = g
+    return (r, v) if isinstance(v, str) else (r, v[0])
+
+
+def _gene_sort_key(g):
+    """Total order over bare and tuned genes (str and tuple values do not
+    compare directly): (region, variant, params)."""
+    r, v = g
+    return (r, v, ()) if isinstance(v, str) else (r, v[0], tuple(v[1]))
 
 
 @dataclass
@@ -141,6 +187,7 @@ class CostModel:
     _pair_corr: dict = field(default_factory=dict)
 
     def __post_init__(self):
+        self._cand = {(c.region, c.variant): c for c in self.candidates}
         host = {}
         for c in self.candidates:
             host.setdefault(c.region, self.host_seconds(c))
@@ -174,6 +221,50 @@ class CostModel:
         flops = c.flops + TRANSCENDENTAL_WEIGHT * c.transcendentals
         return flops / HOST_FLOPS + c.boundary_bytes / HOST_BW
 
+    # -- tile-parameter terms ------------------------------------------
+    def _tile_adjustment(self, region: str, variant: str, params) -> float:
+        """Deterministic seconds adjustment of a tile point relative to the
+        variant's defaults: grid occupancy + unroll instruction count +
+        VMEM-pressure knee.  0.0 when the variant declared no TuningSpace
+        or the Step-3 candidate record is unknown."""
+        c = self._cand.get((region, variant))
+        space = tuning_space(region, variant)
+        if c is None or space is None:
+            return 0.0
+        accel = self.accel_seconds(c)
+        p = dict(params or {})
+        adj, vmem_ratio = 0.0, 1.0
+        for name, default in space.default_params().items():
+            val = p.get(name, default)
+            if (not isinstance(val, (int, float))
+                    or not isinstance(default, (int, float))
+                    or val <= 0 or default <= 0):
+                continue  # 0-sentinel "auto" knobs carry no seed signal
+            if "unroll" in name:
+                adj += UNROLL_OVERHEAD * accel * (default / val - 1.0)
+            else:
+                adj += GRID_STEP_OVERHEAD * (default / val - 1.0)
+                vmem_ratio *= val / default
+        frac = getattr(c, "resource_fraction", 0.0) * vmem_ratio
+        if frac > VMEM_KNEE:
+            adj += (VMEM_PRESSURE * accel
+                    * (frac - VMEM_KNEE) / max(1.0 - VMEM_KNEE, 1e-6))
+        return adj
+
+    def _gene_delta(self, g) -> float:
+        """Current delta of a gene; a tuned gene not yet observed seeds
+        from its base variant's delta plus the tile adjustment (shared by
+        predict AND observe, so calibration starts from the seed, not 0)."""
+        d = self._delta.get(g)
+        if d is not None:
+            return d
+        region, val = g
+        if isinstance(val, str):
+            return 0.0
+        variant = val[0]
+        return (self._delta.get((region, variant), 0.0)
+                + self._tile_adjustment(region, variant, dict(val[1])))
+
     # -- prediction ----------------------------------------------------
     def predict(self, impl) -> float:
         """Predicted run seconds of a composite genome (never negative).
@@ -185,9 +276,10 @@ class CostModel:
         t = self._base
         genes = _impl_genes(impl)
         for g in genes:
-            t += self._delta.get(g, 0.0)
+            t += self._gene_delta(g)
         if len(genes) >= 2 and self._pair_corr:
-            for pair in itertools.combinations(genes, 2):
+            base = [_gene_base(g) for g in genes]
+            for pair in itertools.combinations(base, 2):
                 t += self._pair_corr.get(pair, 0.0)
         return max(t, 1e-9)
 
@@ -218,7 +310,11 @@ class CostModel:
             # so a pair whose residual keeps coming back with the same sign
             # is systematically non-additive (see bias_notes)
             rel = err / max(abs(measured_seconds), 1e-12)
-            pairs = list(itertools.combinations(genes, 2))
+            # pair keys strip tile params: the interaction is between the
+            # regions' variants, not any particular tile point, and the
+            # persisted pair_corr format stays exactly as before tuning
+            pairs = list(itertools.combinations(
+                [_gene_base(g) for g in genes], 2))
             for pair in pairs:
                 self._pair_resid.setdefault(pair, []).append(rel)
                 self._pair_abs.setdefault(pair, []).append(err / len(pairs))
@@ -233,7 +329,7 @@ class CostModel:
                     self._pair_corr[pair] = (self._pair_corr.get(pair, 0.0)
                                              + sum(tail) / len(tail))
         for g in genes:
-            self._delta[g] = self._delta.get(g, 0.0) + err / len(genes)
+            self._delta[g] = self._gene_delta(g) + err / len(genes)
 
     def bias_notes(self) -> list[dict]:
         """Gene pairs whose multi-gene observations stay systematically
@@ -272,10 +368,22 @@ class CostModel:
         re-based all-ref time, per-gene deltas, and the sticky pairwise
         interaction corrections.  Stored next to the measurements in the
         plan cache so a re-opened search starts calibrated instead of from
-        the roofline seeds."""
+        the roofline seeds.
+
+        Bare genes keep the pre-tuning 3-element ``[region, variant,
+        seconds]`` row format (old snapshots round-trip bit-identically);
+        a tuned gene exports a 4-element ``[region, variant, [[name,
+        value], ...], seconds]`` row that old readers simply skip."""
+        delta = []
+        for (r, v), s in sorted(self._delta.items(),
+                                key=lambda kv: _gene_sort_key(kv[0])):
+            if isinstance(v, str):
+                delta.append([r, v, s])
+            else:
+                delta.append([r, v[0], [[k, val] for k, val in v[1]], s])
         return {
             "base": self._base,
-            "delta": [[r, v, s] for (r, v), s in sorted(self._delta.items())],
+            "delta": delta,
             "pair_corr": [[list(a), list(b), s]
                           for (a, b), s in sorted(self._pair_corr.items())],
         }
@@ -293,8 +401,14 @@ class CostModel:
             loaded = True
         for item in state.get("delta", ()):
             try:
-                r, v, s = item
-                self._delta[(str(r), str(v))] = float(s)
+                if len(item) == 4:            # tuned gene: tile-param row
+                    r, v, params, s = item
+                    key = (str(r), (str(v), tuple((str(k), val)
+                                                  for k, val in params)))
+                else:
+                    r, v, s = item
+                    key = (str(r), str(v))
+                self._delta[key] = float(s)
                 loaded = True
             except (TypeError, ValueError):
                 continue

@@ -54,10 +54,14 @@ def compile_key(program: str, impl, args) -> tuple:
     offload pattern, the abstract shapes/dtypes the executable was built
     for, and the variant-registry version.  Two jobs with equal keys
     compute the same jaxpr — their compiled executables are
-    interchangeable.  The registry version makes re-registering ANY
-    variant (including overwriting an existing name with new code)
-    invalidate cross-run executable reuse, so a re-plan after a kernel
-    edit never times a stale executable."""
+    interchangeable.  Tile-parameter genes flow through
+    ``search.impl_key`` canonicalization, so distinct tile points get
+    distinct executables while a defaulted-param gene shares the bare
+    variant's — no (variant, tile) point is ever compiled twice.  The
+    registry version makes re-registering ANY variant (including
+    overwriting an existing name with new code) invalidate cross-run
+    executable reuse, so a re-plan after a kernel edit never times a
+    stale executable."""
     from repro.core.regions import registry_version
     sig = tuple(
         f"{getattr(a, 'dtype', None)}[{','.join(str(d) for d in getattr(a, 'shape', ()))}]"

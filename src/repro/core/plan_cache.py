@@ -69,7 +69,7 @@ from typing import Optional
 
 import jax
 
-from repro.core.regions import variants
+from repro.core.regions import tuning_space, variants
 from repro.core.search import impl_key
 
 CACHE_VERSION = 1
@@ -96,6 +96,22 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     if cfg_fields.get("strategy", "staged") in ("staged", "exhaustive"):
         cfg_fields = {k: v for k, v in cfg_fields.items()
                       if k != "seed" and not k.startswith("ga_")}
+    # tune_tiles=False searches exactly the pre-tuning space: dropping the
+    # field keeps every pre-tuning cache key bit-identical (old entries
+    # keep hitting).  When on, the key additionally carries each variant's
+    # declared TuningSpace signature — widening a space re-opens the plan.
+    tuned = bool(cfg_fields.get("tune_tiles", False))
+    if not tuned:
+        cfg_fields.pop("tune_tiles", None)
+
+    def _tuning_signatures(region_name: str) -> dict:
+        sigs = {}
+        for v in sorted(variants(region_name)):
+            space = tuning_space(region_name, v)
+            if space is not None:
+                sigs[v] = space.signature()
+        return sigs
+
     payload = {
         "program": program.name,
         "backend": backend or jax.default_backend(),
@@ -112,6 +128,7 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
                 "preferred": [r.deploy_variant, r.measure_variant],
                 "static_kwargs": sorted(
                     (k, repr(v)) for k, v in r.static_kwargs.items()),
+                **({"tuning": _tuning_signatures(r.name)} if tuned else {}),
             }
             for r in program.regions
         ],

@@ -52,7 +52,8 @@ from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
 from repro.core.plan_cache import (PlanCache, measurement_cache_key,
                                    plan_cache_key, resolve_cache)
 from repro.core.program import OffloadableProgram
-from repro.core.regions import Impl, offload_variants
+from repro.core.regions import (BoundTuningSpace, Impl, offload_variants,
+                                tuning_space)
 from repro.core.resources import ResourceEstimate, precompile_many
 from repro.core.search import Measurement, MeasurementLedger
 from repro.core.strategies import SearchCandidate, SearchState, make_strategy
@@ -78,6 +79,13 @@ class PlannerConfig:
     * ``resource_cap`` (float, 1.0) — summed VMEM fraction a combined
       pattern may claim; over-cap patterns are never built.
     * ``unroll_b`` (int, 1)         — kernel unroll knob (paper's ``b``).
+    * ``tune_tiles`` (bool, False)  — widen the Step-4 genome from
+      ``{region -> variant}`` to ``{region -> (variant, tile params)}``
+      for variants that declared a ``TuningSpace`` at registration: the
+      GA mutates/crosses tile points, staged adds a round-4 hill climb
+      over the winner's tiles, exhaustive enumerates every valid point.
+      Off (the default) reproduces the variant-only search bit-for-bit
+      and keeps pre-tuning plan-cache keys unchanged.
 
     Measurement fidelity (NOT in the cache key — they change timing noise,
     never the search space):
@@ -128,6 +136,8 @@ class PlannerConfig:
     max_measurements: int = 4   # d (paper: 4)
     resource_cap: float = 1.0   # summed vmem fraction cap for combinations
     unroll_b: int = 1           # kernel unroll knob (paper: 1)
+    tune_tiles: bool = False    # search (variant, tile params) genes
+
     warmup: int = 1
     reps: int = 5
     # ---- Step-4 search strategy (core/strategies.py) ----
@@ -484,6 +494,19 @@ class AutoOffloader:
             # a strategy re-proposing it gets the measurement without spending d.
             # Primed AFTER the cache donations so this run's fresh baseline wins.
             ledger.prime(Impl(), report.baseline)
+
+            def _bound_tuning(p: VariantCandidate):
+                # tile-parameter genes only when the config asks for them
+                # AND the variant declared a space; None keeps the
+                # variant-only trajectory bit-identical
+                if not cfg.tune_tiles:
+                    return None
+                space = tuning_space(p.region, p.variant)
+                if space is None:
+                    return None
+                return BoundTuningSpace(
+                    space, tuple(region_map[p.region].analysis_args))
+
             state = SearchState(
                 regions=eff_regions,
                 ranked=[SearchCandidate(p.region, p.variant,
@@ -492,7 +515,8 @@ class AutoOffloader:
                                         flops=p.analysis.flops,
                                         transcendentals=p.analysis.transcendentals,
                                         boundary_bytes=p.analysis.boundary_bytes,
-                                        alignment=p.analysis.alignment)
+                                        alignment=p.analysis.alignment,
+                                        tuning=_bound_tuning(p))
                         for p in ranked if p.region in eff_regions],
                 resource_cap=cfg.resource_cap,
                 seed=cfg.seed,
@@ -518,10 +542,17 @@ class AutoOffloader:
             state.cost_model = model
 
             # |non-ref genome space| of the survivors — make_strategy("auto")
-            # picks exhaustive/staged/surrogate from this
+            # picks exhaustive/staged/surrogate from this.  A variant with
+            # a bound TuningSpace contributes every valid tile point (the
+            # bare default is one of them); without tuning each variant
+            # counts once, exactly as before.
             space = 1
             for r in eff_regions:
-                space *= 1 + len(state.variants_of(r))
+                n = 0
+                for c in state.variants_of(r):
+                    n += (max(c.tuning.size(), 1)
+                          if c.tuning is not None else 1)
+                space *= 1 + n
             report.search_space = max(space - 1, 0)
             strategy = make_strategy(cfg, space_size=report.search_space)
             strategy.run(state, ledger)

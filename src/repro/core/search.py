@@ -45,6 +45,8 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro.core.regions import canonical_gene, gene_variant
+
 
 @dataclass
 class Measurement:
@@ -176,8 +178,14 @@ def time_callable(fn, args, *, warmup: int = 1, reps: int = 5,
 def impl_key(impl) -> tuple:
     """Canonical hashable identity of an offload pattern: the sorted non-ref
     genes.  ``{a: ref, b: offload}`` and ``{b: offload}`` are the same
-    program and must hit the same ledger entry."""
-    return tuple(sorted((r, v) for r, v in dict(impl).items() if v != "ref"))
+    program and must hit the same ledger entry.  Genes may carry tile
+    params (``(variant, params)``); params equal to the variant's declared
+    defaults canonicalize away (see :func:`repro.core.regions
+    .canonical_gene`), so a defaulted-param gene and the bare variant — and
+    any pre-tuning cache entry — share one key."""
+    return tuple(sorted((r, canonical_gene(r, v))
+                        for r, v in dict(impl).items()
+                        if gene_variant(v) != "ref"))
 
 
 @dataclass

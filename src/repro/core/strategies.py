@@ -61,7 +61,7 @@ import itertools
 import random
 from dataclasses import dataclass, field
 
-from repro.core.regions import Impl
+from repro.core.regions import Impl, gene_variant, split_gene
 from repro.core.search import Measurement, MeasurementLedger
 
 STRATEGY_NAMES = ("staged", "genetic", "surrogate", "exhaustive", "auto")
@@ -82,6 +82,12 @@ class SearchCandidate:
     by the surrogate search.  They default to 0/1 so hand-built states
     (tests, tools) that only rank still work — a CostModel built from such
     candidates just predicts pure launch overhead.
+
+    ``tuning`` is the variant's tile-parameter space when the planner runs
+    with ``tune_tiles`` (a ``BoundTuningSpace`` closed over the region's
+    abstract args, duck-typed: points/neighbors/canonical).  ``None`` —
+    the default, and always the case pre-tuning — keeps every strategy's
+    trajectory bit-identical to the variant-only genome.
     """
     region: str
     variant: str
@@ -91,6 +97,7 @@ class SearchCandidate:
     transcendentals: float = 0.0
     boundary_bytes: float = 0.0
     alignment: float = 1.0
+    tuning: object = None
 
 
 @dataclass
@@ -127,8 +134,9 @@ class SearchState:
         """Summed resource fraction of a genome's non-ref genes — the single
         definition of cap accounting all strategies share."""
         frac = self.fractions()
-        return sum(frac.get((r, v), 0.0) for r, v in dict(impl).items()
-                   if v != "ref")
+        return sum(frac.get((r, gene_variant(v)), 0.0)
+                   for r, v in dict(impl).items()
+                   if gene_variant(v) != "ref")
 
     def begin_stage(self, stage: str) -> dict:
         """Open a trace entry; callers fill ``patterns`` per measurement so
@@ -136,6 +144,36 @@ class SearchState:
         entry = {"stage": stage, "patterns": []}
         self.trace.append(entry)
         return entry
+
+
+def _tile_alleles(state: SearchState, region: str) -> list:
+    """Allele list of one region's gene: ``ref``, each eligible variant,
+    and — when a variant declared a TuningSpace — every valid non-default
+    tile point as a ``(variant, params)`` gene.  Without tuning spaces
+    this is exactly the pre-tuning list, so RNG draw sequences (hence the
+    golden GA trajectories) are unchanged."""
+    vals: list = ["ref"]
+    for c in state.variants_of(region):
+        vals.append(c.variant)
+        if c.tuning is not None:
+            for p in c.tuning.points():
+                canon = c.tuning.canonical(p)
+                if canon:
+                    vals.append((c.variant, canon))
+    return vals
+
+
+def _step_gene(value, space, rng) -> object:
+    """Neighbor-step tile mutation: move the gene's params one position
+    along one axis of its TuningSpace (valid points only); a bare variant
+    steps off its defaults.  Canonicalized, so stepping back onto the
+    defaults returns the bare variant gene."""
+    name, params = split_gene(value)
+    nbrs = space.neighbors(params)
+    if not nbrs:
+        return value
+    canon = space.canonical(nbrs[rng.randrange(len(nbrs))])
+    return name if not canon else (name, canon)
 
 
 class SearchStrategy:
@@ -185,12 +223,29 @@ class StagedSearch(SearchStrategy):
     serial order the original per-pattern loop had (the golden parity test
     replays that order).  A ``None`` mid-batch means the budget died inside
     the round — exactly where the serial protocol would have been cut off —
-    so the strategy stops without opening the later rounds."""
+    so the strategy stops without opening the later rounds.
+
+    When the planner attaches TuningSpaces (``tune_tiles``), a round 4
+    hill-climbs the tile params of the best pattern measured so far:
+    each step proposes every valid one-axis neighbor of the current
+    winner's tunable genes as one batch and moves to the best improving
+    point, stopping when no neighbor improves or the budget dies.  The
+    round (and its trace stage) only opens when tunable candidates exist,
+    so pre-tuning runs keep the exact 3-round trace."""
     name = "staged"
 
     def proposals(self, state: SearchState, ledger: MeasurementLedger):
         base = state.baseline
         base_ok = base is not None and base.ok
+        # running best over everything measured this run, seeded by the
+        # all-ref baseline — round 4 climbs from here
+        best_impl = Impl()
+        best_s = base.run_seconds if base_ok else float("inf")
+
+        def track(impl: Impl, m: Measurement) -> None:
+            nonlocal best_impl, best_s
+            if m.ok and m.run_seconds < best_s:
+                best_impl, best_s = impl, m.run_seconds
 
         # trace entries are appended up-front and filled per measurement, so
         # a budget exhaustion mid-round still leaves an accurate trace
@@ -208,6 +263,7 @@ class StagedSearch(SearchStrategy):
                 continue
             t1["patterns"].append(Impl({region: variant}).describe())
             round1.append((region, variant, m))
+            track(Impl({region: variant}), m)
 
         # A failed baseline measures as inf, which would promote EVERY ok
         # round-1 measurement to "winner" — combinations must only be built
@@ -237,6 +293,7 @@ class StagedSearch(SearchStrategy):
                     died = True
                     continue
                 t2["patterns"].append(impl.describe())
+                track(impl, m)
         if died:
             return
 
@@ -254,8 +311,58 @@ class StagedSearch(SearchStrategy):
         if singles:
             results = yield singles
             for impl, m in zip(singles, results):
-                if m is not None:
-                    t3["patterns"].append(impl.describe())
+                if m is None:
+                    died = True
+                    continue
+                t3["patterns"].append(impl.describe())
+                track(impl, m)
+
+        # round 4: tile tuning of the winning pattern (only opened when
+        # Step-3 attached TuningSpaces — pre-tuning traces stay 3 rounds)
+        tuned = {(c.region, c.variant): c.tuning
+                 for c in state.ranked if c.tuning is not None}
+        if died or not tuned or ledger.exhausted():
+            return
+        current, current_s = best_impl, best_s
+        t4 = None
+        for _ in range(4):                        # bounded hill climb
+            if ledger.exhausted():
+                return
+            props: list[Impl] = []
+            proposed: set[str] = set()
+            for r in current:
+                name, params = split_gene(current[r])
+                space = tuned.get((r, name))
+                if space is None:
+                    continue
+                for p in space.neighbors(params):
+                    canon = space.canonical(p)
+                    g = dict(current)
+                    g[r] = name if not canon else (name, canon)
+                    impl = Impl(g)
+                    key = impl.describe()
+                    if key in proposed:
+                        continue
+                    proposed.add(key)
+                    if state.impl_fraction(impl) > state.resource_cap:
+                        state.skipped.append(key)
+                        continue
+                    props.append(impl)
+            if not props:
+                return
+            if t4 is None:
+                t4 = state.begin_stage("round 4 (tile tuning)")
+            results = yield props
+            improved = False
+            for impl, m in zip(props, results):
+                if m is None:
+                    return
+                t4["patterns"].append(impl.describe())
+                if m.ok and m.run_seconds < current_s:
+                    current, current_s = impl, m.run_seconds
+                    improved = True
+            if not improved:
+                return
 
 
 # ---------------------------------------------------------------------------
@@ -317,8 +424,14 @@ class GeneticSearch(SearchStrategy):
         if not regions:
             return
         rng = random.Random(state.seed)
-        alleles = {r: ["ref"] + [c.variant for c in state.variants_of(r)]
-                   for r in regions}
+        # alleles include every valid non-default tile point of variants
+        # that declared a TuningSpace — identical to the pre-tuning list
+        # when none did, so golden GA trajectories are unchanged
+        alleles = {r: _tile_alleles(state, r) for r in regions}
+        tuned_spaces = {r: {c.variant: c.tuning for c in state.variants_of(r)
+                            if c.tuning is not None}
+                        for r in regions}
+        has_tuning = any(tuned_spaces[r] for r in regions)
         frac = state.fractions()
         model = state.cost_model if self.surrogate else None
         # surrogate self-cap: never spend the full verification budget —
@@ -338,14 +451,16 @@ class GeneticSearch(SearchStrategy):
             # the FPGA resource limit are never built)
             g = dict(g)
             while state.impl_fraction(g) > state.resource_cap:
-                on = [r for r in regions if g[r] != "ref"]
+                on = [r for r in regions if gene_variant(g[r]) != "ref"]
                 if not on:
                     break
-                g[max(on, key=lambda r: frac.get((r, g[r]), 0.0))] = "ref"
+                g[max(on, key=lambda r: frac.get(
+                    (r, gene_variant(g[r])), 0.0))] = "ref"
             return g
 
         def to_impl(g: dict) -> Impl:
-            return Impl({r: v for r, v in g.items() if v != "ref"})
+            return Impl({r: v for r, v in g.items()
+                         if gene_variant(v) != "ref"})
 
         # seed population from the Step-3 efficiency ranking: the all-best
         # genome first (the staged round-2 full combination), then the
@@ -462,6 +577,16 @@ class GeneticSearch(SearchStrategy):
                 for r in regions:                             # per-gene
                     if rng.random() < self.mutation:
                         child[r] = rng.choice(alleles[r])
+                if has_tuning:
+                    # neighbor-step tile mutation: nudge one axis of a
+                    # tunable gene one position.  RNG is consumed only
+                    # when tuning spaces exist, so pre-tuning runs keep
+                    # their exact draw sequence.
+                    for r in regions:
+                        space = tuned_spaces[r].get(gene_variant(child[r]))
+                        if space is not None \
+                                and rng.random() < self.mutation:
+                            child[r] = _step_gene(child[r], space, rng)
                 nxt.append(repair(child))
             pop = nxt
 
@@ -480,8 +605,10 @@ class ExhaustiveSearch(SearchStrategy):
         regions = list(state.regions)
         if not regions:
             return
-        allele_lists = [["ref"] + [c.variant for c in state.variants_of(r)]
-                        for r in regions]
+        # tile points of tuning-declaring variants are part of the space —
+        # exhaustive tile search is the oracle the surrogate is measured
+        # against in benchmarks/autotune.py
+        allele_lists = [_tile_alleles(state, r) for r in regions]
         t = state.begin_stage("exhaustive enumeration")
 
         pending: list[Impl] = []
@@ -497,7 +624,8 @@ class ExhaustiveSearch(SearchStrategy):
         for combo in itertools.product(*allele_lists):
             if ledger.exhausted() and not pending:
                 return       # don't walk (or log skips for) the unaffordable tail
-            impl = Impl({r: v for r, v in zip(regions, combo) if v != "ref"})
+            impl = Impl({r: v for r, v in zip(regions, combo)
+                         if gene_variant(v) != "ref"})
             if not impl:
                 continue                  # all-ref = the baseline, free
             if state.impl_fraction(impl) > state.resource_cap:

@@ -16,10 +16,23 @@ AI analysis uses).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """The largest divisor of ``n`` that is <= ``cap`` (>= 1).  Used to
+    clamp proposed tile knobs to legal values: the autotuner may propose
+    any point, and legality lives in the TuningSpace predicate — the
+    kernel itself must degrade gracefully, never assert."""
+    cap = max(1, min(cap, n))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
 
 
 def _fir_kernel(xr_ref, xi_ref, hr_ref, hi_ref, yr_ref, yi_ref, *,
@@ -61,8 +74,22 @@ def fir_filter_bank(x: jax.Array, h: jax.Array, *, block_n: int = 512,
     ~= (512+127+128+512)*8B = 10 KB << 16 MiB; block_n is lane-aligned."""
     m, n = x.shape
     _, k = h.shape
-    assert n % block_n == 0, (n, block_n)
-    assert k % tap_unroll == 0, (k, tap_unroll)
+    # proposed tile knobs are clamped, not asserted: the tuner owns
+    # legality (TuningSpace predicate) and an illegal point must still
+    # produce a correct, measurable kernel.  Both knobs are static under
+    # jit, so the clamp (and its warning) happens once per trace.
+    if n % block_n != 0 or block_n > n:
+        eff = largest_divisor(n, block_n)
+        warnings.warn(
+            f"fir_filter_bank: block_n={block_n} invalid for n={n}; "
+            f"clamped to {eff}", stacklevel=2)
+        block_n = eff
+    if k % tap_unroll != 0 or tap_unroll > k:
+        eff = largest_divisor(k, tap_unroll)
+        warnings.warn(
+            f"fir_filter_bank: tap_unroll={tap_unroll} invalid for k={k}; "
+            f"clamped to {eff}", stacklevel=2)
+        tap_unroll = eff
     pad = k - 1
     xr = jnp.pad(jnp.real(x).astype(jnp.float32), ((0, 0), (pad, 0)))
     xi = jnp.pad(jnp.imag(x).astype(jnp.float32), ((0, 0), (pad, 0)))

@@ -32,16 +32,19 @@ from repro.serving.sampling import SamplingParams
 
 def planned_impl(arch: str, cache: PlanCache, reps: int = 2,
                  strategy: str = "staged", seed: int = 0,
-                 verify_workers: int = 1) -> Impl:
+                 verify_workers: int = 1, tune_tiles: bool = False) -> Impl:
     """Best cached/measured offload pattern for the arch's block regions,
-    merged over the architectural defaults."""
+    merged over the architectural defaults.  ``tune_tiles`` widens the
+    search genome to (variant, tile params) — see docs/search-strategies.md
+    "Kernel autotuning"."""
     from repro.core.planner import AutoOffloader, PlannerConfig
     from repro.models.offload_program import make_lm_program
 
     prog = make_lm_program(arch)
     report = AutoOffloader(PlannerConfig(
         reps=reps, strategy=strategy, seed=seed,
-        verify_workers=verify_workers)).plan(prog, cache=cache)
+        verify_workers=verify_workers,
+        tune_tiles=tune_tiles)).plan(prog, cache=cache)
     src = ("plan cache" if report.from_cache
            else f"measured search [{report.strategy}]")
     print(f"auto-offload [{src}]: {report.best_pattern or 'all-ref'} "
@@ -78,6 +81,12 @@ def main() -> None:
                     help="strategy RNG seed for --auto-offload; kept "
                          "separate from --seed (sampling) so varying the "
                          "sampling seed never re-keys the plan cache")
+    ap.add_argument("--tune-tiles", action="store_true",
+                    help="autotune kernel tile parameters during "
+                         "--auto-offload: the Step-4 genome becomes "
+                         "(variant, tile params) for variants declaring a "
+                         "TuningSpace (docs/search-strategies.md, 'Kernel "
+                         "autotuning'); part of the plan-cache key")
     ap.add_argument("--verify-workers", type=int, default=1,
                     help="concurrent AOT-compile threads for the planner's "
                          "pattern verification (core/executor.py); the "
@@ -99,7 +108,8 @@ def main() -> None:
         impl = planned_impl(args.arch, PlanCache(args.plan_cache),
                             strategy=args.offload_strategy,
                             seed=args.offload_seed,
-                            verify_workers=args.verify_workers)
+                            verify_workers=args.verify_workers,
+                            tune_tiles=args.tune_tiles)
     key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
     ctx = args.prompt_len + args.new_tokens + cfg.n_front

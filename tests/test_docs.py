@@ -32,7 +32,9 @@ DOCUMENTED = {
     "repro.core.plan_cache": ["PlanCache", "plan_cache_key",
                               "measurement_cache_key", "resolve_cache"],
     "repro.core.regions": ["Impl", "register_variant", "dispatch",
-                           "variants"],
+                           "variants", "TuningSpace", "BoundTuningSpace",
+                           "tuning_space", "canonical_gene", "gene_variant",
+                           "split_gene"],
     "repro.core.program": ["OffloadableProgram", "Region"],
     "repro.core.extract": ["discover", "extract", "ExtractionReport",
                            "RegionMatch", "CandidateSite", "Rejection",

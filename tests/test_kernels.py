@@ -232,3 +232,88 @@ def test_decode_attention_kernel_matches_ref(b, hq, hkv, s, d, window, bk):
     ref = decode_ref(q, kc, vc, slot, cur, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=5e-6, atol=5e-6)
+
+
+@pytest.mark.parametrize("s,bk", [
+    (96, 256),     # cache shorter than one block
+    (40, 128),     # much shorter, non-multiple of the lane width
+    (130, 128),    # one full block + a 2-slot tail
+])
+def test_decode_attention_short_sequences(s, bk):
+    """Regression: the autotuner may propose any block_k, including one
+    larger than (or not dividing) the cache length — the kernel must clamp
+    and pad, never assert, and still match the dense oracle."""
+    from repro.kernels.decode_attention import decode_attention
+    from repro.models.layers import decode_attention as decode_ref
+
+    b, hq, hkv, d = 2, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    cur = jnp.array([s - 1] * b, jnp.int32)
+    slot = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    out = decode_attention(q, kc, vc, slot, cur, block_k=bk, interpret=True)
+    ref = decode_ref(q, kc, vc, slot, cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-6, atol=5e-6)
+
+
+def test_decode_attn_ref_variant_matches_dense_oracle():
+    """The registered planner-side ref variant computes the same dense
+    masked softmax as the model-layer oracle (windowed and unwindowed)."""
+    from repro.kernels.ops import decode_attn_ref
+    from repro.models.layers import decode_attention as decode_ref
+
+    b, hq, hkv, s, d = 2, 8, 2, 192, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    cur = jnp.array([s // 2 + 5] * b, jnp.int32)
+    slot = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    slot = jnp.where(slot <= cur[:, None], slot, -1)
+    for window in (0, 64):
+        out = decode_attn_ref(q, kc, vc, slot, cur, window=window)
+        ref = decode_ref(q, kc, vc, slot, cur, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=5e-6, atol=5e-6)
+
+
+# ---------------------------------------------------------------------------
+# FIR tile-knob clamping (the kernel degrades gracefully; legality lives in
+# the TuningSpace predicate, so an illegal proposed point must still run)
+# ---------------------------------------------------------------------------
+def test_largest_divisor():
+    from repro.kernels.fir import largest_divisor
+    assert largest_divisor(96, 64) == 48
+    assert largest_divisor(12, 8) == 6
+    assert largest_divisor(7, 3) == 1
+    assert largest_divisor(128, 512) == 128    # cap beyond n clamps to n
+    assert largest_divisor(10, 0) == 1         # degenerate cap
+
+
+def test_fir_clamps_invalid_block_n_and_warns():
+    kx, kh = jax.random.split(KEY)
+    x = (jax.random.normal(kx, (2, 96)) + 1j * jax.random.normal(kh, (2, 96))
+         ).astype(jnp.complex64)
+    h = (jax.random.normal(kh, (2, 8)) + 1j * jax.random.normal(kx, (2, 8))
+         ).astype(jnp.complex64)
+    with pytest.warns(UserWarning, match="block_n=64 invalid"):
+        out = fir_filter_bank(x, h, block_n=64, interpret=True)
+    ref = R.fir_ref(x, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_fir_clamps_invalid_tap_unroll_and_warns():
+    kx, kh = jax.random.split(KEY)
+    x = (jax.random.normal(kx, (2, 128)) + 1j * jax.random.normal(kh, (2, 128))
+         ).astype(jnp.complex64)
+    h = (jax.random.normal(kh, (2, 12)) + 1j * jax.random.normal(kx, (2, 12))
+         ).astype(jnp.complex64)
+    with pytest.warns(UserWarning, match="tap_unroll=8 invalid"):
+        out = fir_filter_bank(x, h, block_n=64, tap_unroll=8, interpret=True)
+    ref = R.fir_ref(x, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)

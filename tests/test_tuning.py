@@ -1,0 +1,435 @@
+"""Tile-parameter genes: TuningSpace semantics, the canonical-gene rule
+(defaulted params == bare variant everywhere), ledger/compile-cache/plan-
+cache identity, pre-tuning cache back-compat, the tile-aware CostModel,
+and per-strategy tuning behavior (staged round 4, GA determinism,
+exhaustive enumeration)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.executor import compile_key
+from repro.core.plan_cache import PlanCache, plan_cache_key
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import (BoundTuningSpace, Impl, TuningSpace,
+                                canonical_gene, dispatch, gene_variant,
+                                register_variant, split_gene, tuning_space,
+                                variants)
+from repro.core.search import Measurement, MeasurementLedger, impl_key
+from repro.core.strategies import (ExhaustiveSearch, GeneticSearch,
+                                   SearchCandidate, SearchState, StagedSearch,
+                                   _tile_alleles)
+
+_counter = [0]
+
+SPACE = dict(axes={"block_n": (64, 128, 256)}, defaults={"block_n": 128})
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 300, body, x)
+
+
+def _tuned_program(space: TuningSpace | None = None):
+    """One region with a slow ref and one tunable destination ``tile``."""
+    tag = f"tune_{_counter[0]}"
+    _counter[0] += 1
+    r = f"{tag}_r"
+    if space is None:
+        space = TuningSpace(**SPACE)
+    register_variant(r, "ref")(_slow_ref)
+
+    @register_variant(r, "tile", tuning=space)
+    def _tile(x, *, block_n=128):
+        return x * 1.0000001
+
+    def build(impl):
+        def run(x):
+            return dispatch(r, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    regions = [Region(r, variants(r)["ref"], abstract)]
+    prog = OffloadableProgram(
+        name=f"tune_toy_{tag}", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=1)
+    return prog, r, _tile
+
+
+def _fake_measure(times: dict | None = None):
+    """Deterministic measurement stand-in: seconds are a pure function of
+    the pattern string (or an explicit table), like the strategy tests'
+    fake — tile points have distinct describe() strings, so they get
+    distinct deterministic timings."""
+    def measure(impl):
+        pattern = Impl(impl).describe()
+        if times is not None:
+            secs = times[pattern]
+        elif pattern == "all-ref":
+            secs = 1.0
+        else:
+            secs = 0.1 + (sum(ord(c) for c in pattern) % 97) / 1000.0
+        return Measurement(pattern, 0.0, secs, [secs], impl=dict(impl))
+    return measure
+
+
+def _state(region: str, space: TuningSpace | None, *, seed: int = 3,
+           fraction: float = 0.1) -> SearchState:
+    bound = BoundTuningSpace(space) if space is not None else None
+    cand = SearchCandidate(region, "tile", fraction, 1.0, tuning=bound)
+    baseline = Measurement("all-ref", 0.0, 1.0, [1.0], impl={})
+    return SearchState(regions=[region], ranked=[cand], seed=seed,
+                       baseline=baseline)
+
+
+# ---------------------------------------------------------------------------
+# TuningSpace semantics
+# ---------------------------------------------------------------------------
+def test_tuning_space_views():
+    space = TuningSpace(axes={"block_n": (64, 128), "tap_unroll": (1, 2, 4)},
+                        defaults={"block_n": 128})
+    assert space.names() == ("block_n", "tap_unroll")
+    # missing defaults fall back to the axis's first value
+    assert space.default_params() == {"block_n": 128, "tap_unroll": 1}
+    # full() overlays known axes only; unknown keys are dropped
+    assert space.full({"tap_unroll": 4, "bogus": 9}) == \
+        {"block_n": 128, "tap_unroll": 4}
+    # canonical: non-default entries in declared axis order; empty == default
+    assert space.canonical({"block_n": 128, "tap_unroll": 1}) == ()
+    assert space.canonical({"tap_unroll": 2, "block_n": 64}) == \
+        (("block_n", 64), ("tap_unroll", 2))
+
+
+def test_tuning_space_validity_points_neighbors():
+    space = TuningSpace(**SPACE, validity=lambda p, args: p["block_n"] != 256)
+    assert [p["block_n"] for p in space.points()] == [64, 128]
+    assert space.size() == 2
+    # a value outside the axis is invalid regardless of the predicate
+    assert not space.is_valid({"block_n": 96})
+    # neighbors of the default: 64 valid, 256 filtered by the predicate
+    assert [p["block_n"] for p in space.neighbors({})] == [64]
+
+    def boom(p, args):
+        raise RuntimeError("bad predicate")
+    erroring = TuningSpace(**SPACE, validity=boom)
+    assert not erroring.is_valid({"block_n": 64})   # erroring = invalid
+    assert erroring.points() == []
+
+
+def test_tuning_space_signature_excludes_validity():
+    a = TuningSpace(**SPACE)
+    b = TuningSpace(**SPACE, validity=lambda p, args: True)
+    sig = a.signature()
+    assert json.loads(json.dumps(sig)) == sig       # JSON-safe
+    assert sig == b.signature() == [["block_n", [64, 128, 256], 128]]
+
+
+def test_bound_tuning_space_closes_over_args():
+    space = TuningSpace(
+        **SPACE, validity=lambda p, args: args[0].shape[0] % p["block_n"] == 0)
+    bound = BoundTuningSpace(
+        space, (jax.ShapeDtypeStruct((128, 128), jnp.float32),))
+    assert [p["block_n"] for p in bound.points()] == [64, 128]
+    assert bound.size() == 2
+    assert not bound.is_valid({"block_n": 256})
+    assert [p["block_n"] for p in bound.neighbors({"block_n": 128})] == [64]
+
+
+# ---------------------------------------------------------------------------
+# Canonical-gene invariants: defaulted params == bare variant everywhere
+# ---------------------------------------------------------------------------
+def test_canonical_gene_collapses_defaults():
+    _, r, _ = _tuned_program()
+    assert canonical_gene(r, ("tile", {"block_n": 128})) == "tile"
+    assert canonical_gene(r, ("tile", {"block_n": 64})) == \
+        ("tile", (("block_n", 64),))
+    # a variant with no declared space drops params entirely
+    assert canonical_gene(r, ("ref", {"block_n": 64})) == "ref"
+    # JSON round-trip forms parse as genes
+    assert split_gene(["tile", [["block_n", 64]]]) == \
+        ("tile", {"block_n": 64})
+    assert gene_variant(("tile", {"block_n": 64})) == "tile"
+
+
+def test_impl_key_and_describe_invariants():
+    _, r, _ = _tuned_program()
+    bare = Impl({r: "tile"})
+    defaulted = Impl({r: ("tile", {"block_n": 128})})
+    tuned = Impl({r: ("tile", {"block_n": 64})})
+    assert impl_key(bare) == impl_key(defaulted)
+    assert bare.describe() == defaulted.describe() == f"{r}=tile"
+    assert impl_key(tuned) != impl_key(bare)
+    assert tuned.describe() == f"{r}=tile[block_n=64]"
+    # a tuned genome survives the plan-cache JSON round trip unchanged
+    loaded = Impl(json.loads(json.dumps({r: ("tile", (("block_n", 64),))})))
+    assert impl_key(loaded) == impl_key(tuned)
+    assert loaded.describe() == tuned.describe()
+
+
+def test_compile_key_shares_defaulted_gene():
+    prog, r, _ = _tuned_program()
+    sample = (jnp.zeros((128, 128), jnp.float32),)
+    k_bare = compile_key(prog.name, Impl({r: "tile"}), sample)
+    k_default = compile_key(
+        prog.name, Impl({r: ("tile", {"block_n": 128})}), sample)
+    k_tuned = compile_key(
+        prog.name, Impl({r: ("tile", {"block_n": 64})}), sample)
+    assert k_bare == k_default          # one executable, never compiled twice
+    assert k_tuned != k_bare            # distinct tile point, distinct build
+
+
+def test_ledger_dedups_defaulted_tile_gene():
+    _, r, _ = _tuned_program()
+    n_calls = [0]
+
+    def measure(impl):
+        n_calls[0] += 1
+        return Measurement(Impl(impl).describe(), 0.0, 0.5, [0.5],
+                           impl=dict(impl))
+
+    ledger = MeasurementLedger(measure, budget=3)
+    m1 = ledger.measure(Impl({r: "tile"}))
+    m2 = ledger.measure(Impl({r: ("tile", {"block_n": 128})}))  # same gene
+    assert m1 is m2
+    assert n_calls[0] == 1 and ledger.budget == 2
+    assert ledger.hits == 1 and ledger.misses == 1
+    # a non-default point is a different pattern: one more miss
+    m3 = ledger.measure(Impl({r: ("tile", {"block_n": 64})}))
+    assert m3 is not m1 and ledger.misses == 2 and ledger.budget == 1
+
+
+def test_dispatch_applies_gene_params():
+    tag = f"tune_{_counter[0]}"
+    _counter[0] += 1
+    r = f"{tag}_disp"
+    seen = {}
+
+    @register_variant(r, "rec", tuning=TuningSpace(**SPACE))
+    def _rec(x, *, block_n=128):
+        seen["block_n"] = block_n
+        return x
+
+    # non-default gene params reach the variant; undeclared ones filtered
+    dispatch(r, Impl({r: ("rec", {"block_n": 64, "bogus": 9})}), 1.0)
+    assert seen["block_n"] == 64
+    dispatch(r, Impl({r: "rec"}), 1.0)      # bare gene: function defaults
+    assert seen["block_n"] == 128
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache key back-compat
+# ---------------------------------------------------------------------------
+def test_plan_cache_key_tuning_backcompat():
+    prog, r, fn = _tuned_program()
+    # tune_tiles=False is the default: the key ignores both the flag and
+    # the declared TuningSpaces, exactly as before tile genes existed
+    k_off = plan_cache_key(prog, PlannerConfig())
+    assert plan_cache_key(prog, PlannerConfig(tune_tiles=False)) == k_off
+    k_on = plan_cache_key(prog, PlannerConfig(tune_tiles=True))
+    assert k_on != k_off
+    # widening the declared space re-opens tuned plans only: the variant
+    # set is unchanged, so the pre-tuning key still hits
+    wider = TuningSpace(axes={"block_n": (64, 128, 256, 512)},
+                        defaults={"block_n": 128})
+    register_variant(r, "tile", tuning=wider)(fn)
+    assert plan_cache_key(prog, PlannerConfig()) == k_off
+    assert plan_cache_key(prog, PlannerConfig(tune_tiles=True)) != k_on
+
+
+def test_pre_tuning_cache_entry_primes_tuned_replan(tmp_path):
+    """A plan persisted by the variant-only search (bare-string impls — the
+    pre-tuning entry format) must load and donate its measurements to a
+    tuned re-plan: the known pattern replays with zero budget."""
+    prog, r, _ = _tuned_program()
+    cache = PlanCache(tmp_path / "plans.json")
+    fixed = AutoOffloader(PlannerConfig(strategy="exhaustive",
+                                        max_measurements=4, reps=1, warmup=0))
+    rep1 = fixed.plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert not rep1.from_cache
+    assert [m.pattern for m in rep1.measurements] == [f"{r}=tile"]
+
+    tuned_cfg = PlannerConfig(strategy="exhaustive", max_measurements=8,
+                              reps=1, warmup=0, tune_tiles=True)
+    rep2 = AutoOffloader(tuned_cfg).plan(prog, jax.random.PRNGKey(0),
+                                         cache=cache)
+    assert not rep2.from_cache           # different key: the search re-opens
+    # the bare pattern is served from the donated entry, budget untouched...
+    assert f"{r}=tile" in [m.pattern for m in rep2.reused]
+    # ...so only the genuinely new tile points consume measurements
+    assert sorted(m.pattern for m in rep2.measurements) == \
+        [f"{r}=tile[block_n=256]", f"{r}=tile[block_n=64]"]
+
+    # the pre-tuning entry itself still replays as an exact hit
+    rep3 = fixed.plan(prog, jax.random.PRNGKey(0), cache=cache)
+    assert rep3.from_cache and rep3.measurements == []
+    # and so does the tuned entry: warm re-plan costs zero budget
+    rep4 = AutoOffloader(tuned_cfg).plan(prog, jax.random.PRNGKey(0),
+                                         cache=cache)
+    assert rep4.from_cache and rep4.measurements == []
+
+
+# ---------------------------------------------------------------------------
+# Tile-aware CostModel
+# ---------------------------------------------------------------------------
+def _model_region():
+    tag = f"tune_{_counter[0]}"
+    _counter[0] += 1
+    r = f"{tag}_cm"
+    space = TuningSpace(axes={"block_n": (64, 128, 256),
+                              "tap_unroll": (1, 2, 4)},
+                        defaults={"block_n": 128})
+    register_variant(r, "tile", tuning=space)(lambda x, **kw: x)
+    return r
+
+
+def _model(r: str, fraction: float = 0.1) -> CostModel:
+    cand = SearchCandidate(r, "tile", fraction, 1.0, flops=1e9,
+                           boundary_bytes=1e8, alignment=1.0)
+    return CostModel(candidates=[cand], baseline_seconds=1.0)
+
+
+def test_cost_model_tile_terms():
+    r = _model_region()
+    model = _model(r)
+    base = model.predict(Impl({r: "tile"}))
+    # smaller block -> more grid steps -> slower prediction
+    assert model.predict(Impl({r: ("tile", {"block_n": 64})})) > base
+    # more unroll -> less loop control -> faster prediction
+    assert model.predict(Impl({r: ("tile", {"tap_unroll": 2})})) < base
+    # a defaulted-params gene is the bare gene: identical prediction
+    assert model.predict(Impl({r: ("tile", {"block_n": 128})})) == base
+    # VMEM knee: a big block pushing the footprint past the knee pays more
+    # than its (negative) grid term saves
+    heavy = _model(r, fraction=0.4)
+    assert heavy.predict(Impl({r: ("tile", {"block_n": 256})})) > \
+        heavy.predict(Impl({r: "tile"}))
+
+
+def test_cost_model_observe_pins_tile_gene():
+    r = _model_region()
+    model = _model(r)
+    bare, tuned = Impl({r: "tile"}), Impl({r: ("tile", {"block_n": 64})})
+    before_bare = model.predict(bare)
+    model.observe(tuned, 0.7)
+    assert model.predict(tuned) == pytest.approx(0.7)
+    # the tuned observation calibrates the tuned gene only — the bare
+    # gene's delta is untouched
+    assert model.predict(bare) == pytest.approx(before_bare)
+
+
+def test_cost_model_state_round_trips_tile_rows():
+    r = _model_region()
+    model = _model(r)
+    bare, tuned = Impl({r: "tile"}), Impl({r: ("tile", {"block_n": 64})})
+    model.observe(bare, 0.9)
+    model.observe(tuned, 0.7)
+    state = json.loads(json.dumps(model.export_state()))   # JSON-safe
+    rows = {len(row): row for row in state["delta"]}
+    assert rows[3][:2] == [r, "tile"]                      # bare: old format
+    assert rows[4][:3] == [r, "tile", [["block_n", 64]]]   # tuned: new row
+    fresh = _model(r)
+    assert fresh.load_state(state)
+    assert fresh.predict(bare) == pytest.approx(model.predict(bare))
+    assert fresh.predict(tuned) == pytest.approx(model.predict(tuned))
+
+
+def test_cost_model_loads_pre_tuning_state():
+    model = CostModel()
+    assert model.load_state({"base": 2.0, "delta": [["rX", "off", -0.5]],
+                             "pair_corr": [[["rX", "off"], ["rY", "fast"],
+                                            0.05]]})
+    assert model.predict(Impl({"rX": "off"})) == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# Strategies with tile genes
+# ---------------------------------------------------------------------------
+def test_tile_alleles_enumerate_valid_points():
+    _, r, _ = _tuned_program()
+    tuned = _state(r, TuningSpace(**SPACE))
+    assert _tile_alleles(tuned, r) == \
+        ["ref", "tile", ("tile", (("block_n", 64),)),
+         ("tile", (("block_n", 256),))]
+    # without tuning spaces the list is exactly the pre-tuning one
+    fixed = _state(r, None)
+    assert _tile_alleles(fixed, r) == ["ref", "tile"]
+
+
+def test_staged_round4_hill_climbs_winner_tiles():
+    _, r, _ = _tuned_program()
+    times = {"all-ref": 1.0, f"{r}=tile": 0.5,
+             f"{r}=tile[block_n=64]": 0.3, f"{r}=tile[block_n=256]": 0.6}
+    state = _state(r, TuningSpace(**SPACE))
+    ledger = MeasurementLedger(_fake_measure(times), budget=6)
+    ledger.prime(Impl(), state.baseline)
+    StagedSearch().run(state, ledger)
+    # rounds 1-3 as ever, then the climb: both neighbors of the winner's
+    # defaults, then the step back toward 128 is a free ledger hit
+    assert [m.pattern for m in ledger.order] == \
+        [f"{r}=tile", f"{r}=tile[block_n=64]", f"{r}=tile[block_n=256]"]
+    stages = [t["stage"] for t in state.trace]
+    assert "round 4 (tile tuning)" in stages
+    best = min((m for m in ledger.served if m.mapping()),
+               key=lambda m: m.run_seconds)
+    assert best.pattern == f"{r}=tile[block_n=64]"
+
+
+def test_staged_without_tuning_keeps_three_rounds():
+    _, r, _ = _tuned_program()
+    state = _state(r, None)
+    ledger = MeasurementLedger(_fake_measure(), budget=6)
+    ledger.prime(Impl(), state.baseline)
+    StagedSearch().run(state, ledger)
+    stages = [t["stage"] for t in state.trace]
+    assert not any("round 4" in s for s in stages)
+    assert [m.pattern for m in ledger.order] == [f"{r}=tile"]
+
+
+@pytest.mark.parametrize("surrogate", [False, True])
+def test_ga_tuned_trajectory_is_deterministic(surrogate):
+    _, r, _ = _tuned_program()
+
+    def run_once():
+        state = _state(r, TuningSpace(**SPACE))
+        if surrogate:
+            state.cost_model = CostModel(candidates=state.ranked,
+                                         baseline_seconds=1.0)
+        ledger = MeasurementLedger(_fake_measure(), budget=5)
+        ledger.prime(Impl(), state.baseline)
+        GeneticSearch(surrogate=surrogate).run(state, ledger)
+        return [m.pattern for m in ledger.order]
+
+    first, second = run_once(), run_once()
+    assert first == second and first        # same sequence, and non-empty
+
+
+def test_exhaustive_enumerates_tile_points():
+    _, r, _ = _tuned_program()
+    state = _state(r, TuningSpace(**SPACE))
+    ledger = MeasurementLedger(_fake_measure(), budget=8)
+    ledger.prime(Impl(), state.baseline)
+    ExhaustiveSearch().run(state, ledger)
+    assert sorted(m.pattern for m in ledger.order) == \
+        [f"{r}=tile", f"{r}=tile[block_n=256]", f"{r}=tile[block_n=64]"]
+
+
+def test_planner_search_space_grows_with_tuning():
+    prog, r, _ = _tuned_program()
+    fixed = AutoOffloader(PlannerConfig(strategy="exhaustive",
+                                        max_measurements=8, reps=1, warmup=0))
+    rep_fixed = fixed.plan(prog, jax.random.PRNGKey(0))
+    assert rep_fixed.search_space == 1
+    assert [m.pattern for m in rep_fixed.measurements] == [f"{r}=tile"]
+
+    tuned = AutoOffloader(PlannerConfig(strategy="exhaustive",
+                                        max_measurements=8, reps=1, warmup=0,
+                                        tune_tiles=True))
+    rep_tuned = tuned.plan(prog, jax.random.PRNGKey(0))
+    assert rep_tuned.search_space == 3       # every valid tile point counts
+    assert sorted(m.pattern for m in rep_tuned.measurements) == \
+        [f"{r}=tile", f"{r}=tile[block_n=256]", f"{r}=tile[block_n=64]"]

@@ -14,7 +14,14 @@
    ``sys.path`` at import time — those hacks mask broken packaging and
    break when files move.
 
-3. Recognizer coverage: every extractor family in
+3. Undeclared tuning knobs: a ``@register_variant`` function whose
+   keyword-only signature exposes tile knobs (``block_*`` / ``*_unroll`` /
+   ``*_chunk``) must declare a ``TuningSpace`` via the decorator's
+   ``tuning=`` keyword — otherwise the autotuner (``tune_tiles``) silently
+   never searches those knobs.  A knob that is deliberately not tunable
+   takes a ``# no-tuning: <why>`` comment on the decorator line.
+
+4. Recognizer coverage: every extractor family in
    ``core/extract.py::FAMILIES`` must map to a ``_match_*`` recognizer in
    ``RECOGNIZERS`` *and* declare at least one positive and one negative
    test in ``tests/test_extract.py::COVERAGE`` whose named test functions
@@ -71,6 +78,65 @@ def _check_file(path: Path, patterns: set[str]) -> list[str]:
                if chain == "time.time"
                else "run via PYTHONPATH=src instead")
         out.append(f"{rel}:{node.lineno}: {chain} forbidden here ({fix})")
+    return out
+
+
+KNOB_PREFIXES = ("block_",)
+KNOB_SUFFIXES = ("_unroll", "_chunk")
+TUNING_WAIVER = "# no-tuning:"
+
+
+def _is_knob(name: str) -> bool:
+    return (name.startswith(KNOB_PREFIXES)
+            or name.endswith(KNOB_SUFFIXES))
+
+
+def _register_variant_call(dec: ast.expr) -> ast.Call | None:
+    if isinstance(dec, ast.Call) and (
+            (isinstance(dec.func, ast.Name)
+             and dec.func.id == "register_variant")
+            or (isinstance(dec.func, ast.Attribute)
+                and dec.func.attr == "register_variant")):
+        return dec
+    return None
+
+
+def check_tuning_spaces() -> list[str]:
+    """Every registered variant with tile knobs in its keyword-only args
+    must declare a TuningSpace (``tuning=`` on the decorator) or carry an
+    explicit ``# no-tuning: <why>`` waiver."""
+    out = []
+    for path in sorted((ROOT / "src/repro").rglob("*.py")):
+        src = path.read_text()
+        lines = src.splitlines()
+        try:
+            tree = ast.parse(src, filename=str(path))
+        except SyntaxError:                       # pragma: no cover
+            continue                              # _check_file reports it
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                call = _register_variant_call(dec)
+                if call is None:
+                    continue
+                knobs = [a.arg for a in node.args.kwonlyargs
+                         if _is_knob(a.arg)]
+                if not knobs:
+                    continue
+                if any(kw.arg == "tuning" for kw in call.keywords):
+                    continue
+                line = (lines[call.lineno - 1]
+                        if call.lineno <= len(lines) else "")
+                if TUNING_WAIVER in line:
+                    continue
+                rel = path.relative_to(ROOT)
+                out.append(
+                    f"{rel}:{node.lineno}: variant {node.name!r} exposes "
+                    f"tuning knob(s) {', '.join(knobs)} but its "
+                    f"register_variant declares no TuningSpace (add "
+                    f"tuning=TuningSpace(...) or a '{TUNING_WAIVER} <why>' "
+                    f"comment)")
     return out
 
 
@@ -155,6 +221,7 @@ def main() -> int:
     for tree in SYS_PATH_TREES:
         for path in sorted((ROOT / tree).rglob("*.py")):
             violations += _check_file(path, {"sys.path.insert"})
+    violations += check_tuning_spaces()
     violations += check_recognizer_coverage()
     for v in violations:
         print(v)
