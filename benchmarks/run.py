@@ -7,6 +7,8 @@
   strategies    staged vs genetic vs exhaustive Step-4 search at equal budget
   autotune      tile-parameter autotuning: tuned vs fixed genome at equal d
   verification  serial vs pipelined pattern verification (core/executor.py)
+  replanning    online replanning: hot-swap pause, pre/post-swap throughput,
+                warm re-open measurement budget (serving/replan.py)
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
   roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
 
@@ -28,7 +30,7 @@ def main() -> None:
     ap.add_argument("--section", default="all",
                     choices=["all", "fig4", "conditions", "extraction",
                              "strategies", "autotune", "verification",
-                             "kernels", "roofline"])
+                             "replanning", "kernels", "roofline"])
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json next to the cwd for the "
                          "sections that support it")
@@ -72,6 +74,12 @@ def main() -> None:
         verification.main(
             budget=max(args.budget, 8), reps=args.reps,
             json_path="BENCH_verification.json" if args.json else None)
+        print()
+    if args.section in ("all", "replanning"):
+        print("== online replanning (hot-swap pause + warm re-open) ==")
+        from benchmarks import replanning
+        replanning.main(
+            json_path="BENCH_replanning.json" if args.json else None)
         print()
     if args.section in ("all", "fig4"):
         print("== paper Fig. 4 (automatic offload speedup) ==")

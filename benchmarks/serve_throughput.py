@@ -37,8 +37,13 @@ def bench_one(cfg, params, *, slots: int, requests: int, new_tokens: int,
     engine.run_to_completion()
     wall = time.perf_counter() - t0
     s = engine.stats()
+    # whole-run windowed view: the regime fingerprint the online replanner
+    # watches (docs/serving-replanning.md) — occupancy + workload balance
+    w = engine.stats(window=engine.ticks)
     s["wall_s"] = wall
     s["tok_per_s"] = s["generated_tokens"] / wall
+    s["occupancy_mean"] = w["occupancy_mean"]
+    s["decode_prefill_ratio"] = w["decode_prefill_ratio"]
     return s
 
 
@@ -62,7 +67,8 @@ def main() -> None:
           f"new_tokens={args.new_tokens} ctx={args.ctx} "
           f"prompt_lengths={sorted(set(PROMPT_LENGTHS))}")
     print(f"{'slots':>5} | {'tok/s':>8} | {'ttft ms (mean/p50)':>18} | "
-          f"{'wait ms':>8} | {'prefill compiles':>16}")
+          f"{'wait ms':>8} | {'occ':>5} | {'dec/pre':>7} | "
+          f"{'prefill compiles':>16}")
     for slots in slot_counts:
         s = bench_one(cfg, params, slots=slots, requests=args.requests,
                       new_tokens=args.new_tokens, ctx=args.ctx,
@@ -70,6 +76,8 @@ def main() -> None:
         print(f"{slots:>5} | {s['tok_per_s']:>8.1f} | "
               f"{s['ttft_s_mean']*1e3:>8.1f} / {s['ttft_s_p50']*1e3:>6.1f} | "
               f"{s['queue_wait_s_mean']*1e3:>8.1f} | "
+              f"{s['occupancy_mean']:>5.2f} | "
+              f"{s['decode_prefill_ratio']:>7.2f} | "
               f"{s['prefill_traces']:>4} for buckets {s['buckets']}")
 
 

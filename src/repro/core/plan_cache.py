@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import os
 from datetime import datetime, timezone
@@ -75,6 +76,15 @@ from repro.core.search import impl_key
 CACHE_VERSION = 1
 DEFAULT_CACHE_ENV = "REPRO_PLAN_CACHE"
 DEFAULT_CACHE_PATH = ".repro_plan_cache.json"
+_TMP_SEQ = itertools.count()        # per-process unique tmp-file sequence
+
+
+def _sane_entries(entries: dict) -> dict:
+    """Drop per-entry garbage: a corrupt/truncated value inside an
+    otherwise-valid file (a concurrent writer died mid-thought, a hand
+    edit went wrong) must degrade to a cache-miss for THAT key, never
+    crash the reader or poison the healthy entries around it."""
+    return {k: v for k, v in entries.items() if isinstance(v, dict)}
 
 
 def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
@@ -83,6 +93,13 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     ``program`` is an OffloadableProgram; ``config`` a PlannerConfig.  The
     registered variant set per region is part of the key so that adding a
     new offload destination (a new variant) re-opens the search.
+
+    Regime conditions (``program.plan_extra``, e.g. the serving regime an
+    online replan targets) key the *plan* but never the *measurements*: a
+    new regime re-opens the search while ``measurement_cache_key`` stays
+    unchanged, so the re-opened search is ledger-primed by every sibling
+    regime's entries.  An empty ``plan_extra`` contributes nothing — keys
+    written before regime conditioning existed keep hitting.
     """
     # measurement-repetition knobs (reps/warmup) don't change the search
     # space, only timing noise — keying on them would make callers with
@@ -133,6 +150,12 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
             for r in program.regions
         ],
     }
+    # regime conditions key the plan only when present: absent/empty
+    # plan_extra leaves the payload — and every pre-regime key — unchanged
+    plan_extra = getattr(program, "plan_extra", None)
+    if plan_extra:
+        payload["plan_conditions"] = sorted(
+            (k, repr(v)) for k, v in plan_extra.items())
     blob = json.dumps(payload, sort_keys=True, default=repr)
     digest = hashlib.sha256(blob.encode()).hexdigest()[:20]
     return f"{program.name}:{payload['backend']}:{digest}"
@@ -193,6 +216,7 @@ class PlanCache:
                 if (isinstance(loaded, dict)
                         and loaded.get("version") == CACHE_VERSION
                         and isinstance(loaded.get("entries"), dict)):
+                    loaded["entries"] = _sane_entries(loaded["entries"])
                     self._data = loaded
             except (json.JSONDecodeError, OSError):
                 pass                  # unreadable cache = cold cache
@@ -206,7 +230,9 @@ class PlanCache:
     # ------------------------------------------------------------------
     def get(self, key: str) -> Optional[dict]:
         entry = self._data["entries"].get(key)
-        return dict(entry) if entry is not None else None
+        # load-time sanitization drops non-dict entries, but an in-process
+        # writer could still have stored one — treat it as a miss, not a crash
+        return dict(entry) if isinstance(entry, dict) else None
 
     def put(self, key: str, entry: dict) -> None:
         entry = dict(entry)
@@ -224,16 +250,25 @@ class PlanCache:
         if not measurement_key:
             return []
         by_pattern: dict[tuple, dict] = {}
-        entries = sorted(self._data["entries"].values(),
-                         key=lambda e: str(e.get("created_at", "")))
+        entries = sorted(
+            (e for e in self._data["entries"].values() if isinstance(e, dict)),
+            key=lambda e: str(e.get("created_at", "")))
         for entry in entries:
             if entry.get("measurement_key") != measurement_key:
                 continue
-            for m in entry.get("measurements", ()):
+            measurements = entry.get("measurements", ())
+            if not isinstance(measurements, (list, tuple)):
+                continue                          # corrupt field: skip entry
+            for m in measurements:
+                if not isinstance(m, dict):
+                    continue                      # corrupt measurement row
                 impl = m.get("impl")
                 if not isinstance(impl, dict) or not impl:
                     continue                      # all-ref: re-measured fresh
-                key = impl_key(impl)              # same identity the ledger uses
+                try:
+                    key = impl_key(impl)          # same identity the ledger uses
+                except (TypeError, ValueError):
+                    continue                      # un-canonicalizable garbage
                 if key:
                     by_pattern[key] = dict(m)
         return list(by_pattern.values())
@@ -247,8 +282,9 @@ class PlanCache:
         if not measurement_key:
             return {}
         state: dict = {}
-        entries = sorted(self._data["entries"].values(),
-                         key=lambda e: str(e.get("created_at", "")))
+        entries = sorted(
+            (e for e in self._data["entries"].values() if isinstance(e, dict)),
+            key=lambda e: str(e.get("created_at", "")))
         for entry in entries:
             if entry.get("measurement_key") != measurement_key:
                 continue
@@ -285,13 +321,16 @@ class PlanCache:
                 if (isinstance(disk, dict)
                         and disk.get("version") == CACHE_VERSION
                         and isinstance(disk.get("entries"), dict)):
-                    merged = dict(disk["entries"])
+                    merged = _sane_entries(disk["entries"])
                     merged.update(self._data["entries"])
                     self._data["entries"] = merged
             except (json.JSONDecodeError, OSError):
                 pass
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        # unique tmp per write: concurrent flushes (threads or processes)
+        # must never consume each other's tmp file between write and rename
+        tmp = self.path.with_suffix(
+            f"{self.path.suffix}.{os.getpid()}.{next(_TMP_SEQ)}.tmp")
         tmp.write_text(json.dumps(self._data, indent=2, sort_keys=True))
         tmp.replace(self.path)
 

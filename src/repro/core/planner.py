@@ -40,6 +40,7 @@ Defaults a=5, c=3, d=4 match the paper's evaluation conditions (§5.1.2).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import jax
@@ -152,6 +153,37 @@ class PlannerConfig:
     ga_topk: int = 2            # surrogate: real measurements per generation
     # ---- verification executor (core/executor.py) ----
     verify_workers: int = 1     # concurrent AOT-compile threads (1 = serial)
+
+
+def conditions_from_stats(stats: dict) -> dict:
+    """Fold a ServeEngine windowed stats view (``engine.stats(window=N)``)
+    into discrete measurement conditions for online replanning.
+
+    The output is deliberately coarse — a plan-cache key ingredient
+    (``OffloadableProgram.plan_extra``), not a telemetry dump: banding keeps
+    neighboring windows of the same regime mapping to the same conditions
+    (no key churn), while a real regime shift (dominant bucket, occupancy
+    band, decode/prefill balance) re-opens the search.  Keys:
+
+    * ``dominant_bucket`` — the prefill bucket with the most admissions in
+      the window (ties favor the longer bucket; 0 when nothing admitted),
+    * ``occupancy_band`` — mean slot occupancy in thirds: low / mid / high,
+    * ``decode_prefill_band`` — ``floor(log2(1 + decode/prefill ratio))``,
+      the workload-balance octave.
+
+    Deterministic: equal stats give equal conditions."""
+    hist = {int(b): int(c)
+            for b, c in dict(stats.get("bucket_hist", {})).items()}
+    dominant = (max(hist.items(), key=lambda kv: (kv[1], kv[0]))[0]
+                if hist else 0)
+    occ = float(stats.get("occupancy_mean", 0.0))
+    occupancy_band = "low" if occ < 1 / 3 else ("mid" if occ < 2 / 3 else "high")
+    ratio = max(float(stats.get("decode_prefill_ratio", 0.0)), 0.0)
+    return {
+        "dominant_bucket": dominant,
+        "occupancy_band": occupancy_band,
+        "decode_prefill_band": int(math.floor(math.log2(1.0 + ratio))),
+    }
 
 
 def _efficiency(analysis: RegionAnalysis,

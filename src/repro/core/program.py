@@ -51,3 +51,10 @@ class OffloadableProgram:
     # batch/seq the sample runs at) — anything that changes Step-4 timings
     # but is not visible in the regions' abstract analysis args
     cache_extra: dict = field(default_factory=dict)
+    # plan-key-ONLY conditions (e.g. the serving regime a replan targets —
+    # core.planner.conditions_from_stats).  Unlike cache_extra these do NOT
+    # enter measurement_cache_key: a regime shift re-opens the *search*
+    # (new plan key) while measurements taken under the same shapes stay
+    # compatible, so the re-opened search primes its ledger from every
+    # sibling regime and re-proposes known patterns for zero budget
+    plan_extra: dict = field(default_factory=dict)

@@ -30,26 +30,57 @@ from repro.serving.engine import ServeEngine
 from repro.serving.sampling import SamplingParams
 
 
+def make_offloader(reps: int = 2, strategy: str = "staged", seed: int = 0,
+                   verify_workers: int = 1, tune_tiles: bool = False):
+    """One long-lived AutoOffloader for launch-time planning AND every
+    online replan: its offloader-lifetime CompileCache keeps re-opened
+    searches verifying through warm executables."""
+    from repro.core.planner import AutoOffloader, PlannerConfig
+    return AutoOffloader(PlannerConfig(
+        reps=reps, strategy=strategy, seed=seed,
+        verify_workers=verify_workers, tune_tiles=tune_tiles))
+
+
 def planned_impl(arch: str, cache: PlanCache, reps: int = 2,
                  strategy: str = "staged", seed: int = 0,
-                 verify_workers: int = 1, tune_tiles: bool = False) -> Impl:
+                 verify_workers: int = 1, tune_tiles: bool = False,
+                 offloader=None) -> Impl:
     """Best cached/measured offload pattern for the arch's block regions,
     merged over the architectural defaults.  ``tune_tiles`` widens the
     search genome to (variant, tile params) — see docs/search-strategies.md
-    "Kernel autotuning"."""
-    from repro.core.planner import AutoOffloader, PlannerConfig
+    "Kernel autotuning".  Pass ``offloader`` to share one instance (and its
+    CompileCache) with an online replanner."""
     from repro.models.offload_program import make_lm_program
 
     prog = make_lm_program(arch)
-    report = AutoOffloader(PlannerConfig(
-        reps=reps, strategy=strategy, seed=seed,
-        verify_workers=verify_workers,
-        tune_tiles=tune_tiles)).plan(prog, cache=cache)
+    if offloader is None:
+        offloader = make_offloader(reps=reps, strategy=strategy, seed=seed,
+                                   verify_workers=verify_workers,
+                                   tune_tiles=tune_tiles)
+    report = offloader.plan(prog, cache=cache)
     src = ("plan cache" if report.from_cache
            else f"measured search [{report.strategy}]")
     print(f"auto-offload [{src}]: {report.best_pattern or 'all-ref'} "
           f"(speedup {report.speedup:.2f}x)")
     return Impl(report.best_pattern)
+
+
+def make_replan_fn(arch: str, offloader, cache: PlanCache,
+                   default_seq: int = 128):
+    """The production ``Replanner.plan_fn``: regime conditions from
+    ``conditions_from_stats`` become the program's ``plan_extra`` (re-keying
+    the plan per regime) and the dominant bucket becomes the measurement
+    ``seq`` (timings reflect the live prompt lengths).  A regime shift that
+    keeps the shapes re-opens the search fully ledger-primed — zero new
+    measurement budget on known patterns."""
+    from repro.models.offload_program import make_lm_program
+
+    def plan_fn(conditions: dict):
+        seq = int(conditions.get("dominant_bucket") or 0) or default_seq
+        prog = make_lm_program(arch, seq=max(seq, 8),
+                               plan_extra=dict(conditions))
+        return offloader.plan(prog, cache=cache)
+    return plan_fn
 
 
 def main() -> None:
@@ -98,24 +129,46 @@ def main() -> None:
                                            DEFAULT_CACHE_PATH),
                     help="plan-cache JSON path (used with --auto-offload; "
                          f"default honors ${DEFAULT_CACHE_ENV})")
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="online replanning: re-open the offload search "
+                         "every N engine ticks on a background thread and "
+                         "hot-swap a strictly-better plan between ticks "
+                         "(0 = off; docs/serving-replanning.md)")
+    ap.add_argument("--replan-on-drift", action="store_true",
+                    help="online replanning: re-plan when the live serving "
+                         "regime (bucket mix, occupancy, decode/prefill "
+                         "balance) drifts from the planned one")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    replanning = bool(args.replan_every or args.replan_on_drift)
+    cache = PlanCache(args.plan_cache)
+    offloader = None
+    if args.auto_offload or replanning:
+        offloader = make_offloader(strategy=args.offload_strategy,
+                                   seed=args.offload_seed,
+                                   verify_workers=args.verify_workers,
+                                   tune_tiles=args.tune_tiles)
     impl = None
     if args.auto_offload:
-        impl = planned_impl(args.arch, PlanCache(args.plan_cache),
-                            strategy=args.offload_strategy,
-                            seed=args.offload_seed,
-                            verify_workers=args.verify_workers,
-                            tune_tiles=args.tune_tiles)
+        impl = planned_impl(args.arch, cache, offloader=offloader)
     key = jax.random.PRNGKey(args.seed)
     params = F.init_params(cfg, key)
     ctx = args.prompt_len + args.new_tokens + cfg.n_front
 
     engine = ServeEngine(cfg, params, slots=args.slots, ctx=ctx,
                          seed=args.seed, impl=impl)
+    replanner = None
+    if replanning:
+        from repro.serving.replan import Replanner, ReplanConfig
+        replanner = Replanner(
+            make_replan_fn(args.arch, offloader, cache,
+                           default_seq=args.prompt_len),
+            config=ReplanConfig(every_ticks=args.replan_every,
+                                on_drift=args.replan_on_drift))
+        engine.attach_replanner(replanner)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     for r in range(args.requests):
         plen = args.prompt_len
@@ -140,6 +193,12 @@ def main() -> None:
           f"({s['generated_tokens']/wall:.1f} tok/s aggregate)")
     print(f"prefill compilations: {s['prefill_traces']} "
           f"(buckets {s['buckets']})")
+    if replanner is not None:
+        replanner.join(timeout=60.0)
+        rs = replanner.stats()
+        print(f"replanning: {rs['replans']} search(es), "
+              f"{rs['offers']} offered, {s['swaps']} swap(s) installed "
+              f"(plan generation {s['plan_generation']})")
 
 
 if __name__ == "__main__":

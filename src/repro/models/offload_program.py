@@ -19,7 +19,13 @@ from repro.core.regions import Impl, variants
 from repro.models import factory as F
 
 
-def make_lm_program(arch: str, batch: int = 2, seq: int = 128) -> OffloadableProgram:
+def make_lm_program(arch: str, batch: int = 2, seq: int = 128,
+                    plan_extra: dict | None = None) -> OffloadableProgram:
+    """Block-level program for ``arch``.  ``batch``/``seq`` are measurement
+    conditions (plan + measurement key); ``plan_extra`` carries plan-key-only
+    regime conditions (``core.planner.conditions_from_stats``) so an online
+    replan under a new serving regime re-opens the search while staying
+    ledger-primed by every sibling regime's measurements."""
     cfg = get_config(arch).reduced()
     _params_box: list = []          # lazy: a plan-cache hit never builds, so
                                     # it must not pay full param initialization
@@ -114,4 +120,5 @@ def make_lm_program(arch: str, batch: int = 2, seq: int = 128) -> OffloadablePro
         description="block-level offload planning over an assigned arch",
         # batch/seq change every Step-4 timing but not the abstract region
         # args, so they must be part of the plan-cache key
-        cache_extra={"batch": batch, "seq": seq})
+        cache_extra={"batch": batch, "seq": seq},
+        plan_extra=dict(plan_extra or {}))

@@ -1,15 +1,19 @@
 """Continuous-batching serving engine (slot-based, vLLM-style admission).
 
 A fixed number of decode slots share one batched KV cache.  Each engine tick:
-  1. admit queued requests into every free slot (bucketed single-sequence
+  1. install any pending plan generation (the online-replanning hot-swap
+     point — see ``PlanGeneration``),
+  2. admit queued requests into every free slot (bucketed single-sequence
      prefill, cache scattered into the slot),
-  2. one batched decode step for every active slot,
-  3. retire finished sequences (max_new_tokens reached) and free the slots.
+  3. one batched decode step for every active slot,
+  4. retire finished sequences (max_new_tokens reached) and free the slots.
 
 The correctness contract (test-asserted): a request's tokens are identical
 whether it runs alone or interleaved with arbitrary other requests — slot
 isolation comes from per-slot cache rows, positions, and per-request sampling
-keys (seed, rid, step).
+keys (seed, rid, step).  Online replanning extends the contract: a plan
+hot-swap between ticks never drops or re-queues a request, and (for patterns
+with identical numerics) never changes a token.
 
 Bucketed prefill: prompts are right-padded to power-of-two length buckets and
 prefilled with a traced ``length`` scalar (``factory.make_bucketed_prefill_
@@ -28,10 +32,11 @@ windows, SSM/RG-LRU states all behave as cache pytrees here).
 """
 from __future__ import annotations
 
+import threading
 import time
-from collections import deque
+from collections import Counter, deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +44,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.regions import Impl
+from repro.core.search import impl_key
 from repro.models import factory as F
 from repro.serving.sampling import GREEDY, SamplingParams, make_sampler
+
+# per-tick event records retained for the windowed stats view; bounds the
+# engine's memory on an infinite request stream
+_EVENT_CAPACITY = 1024
 
 
 class ServeIncompleteError(RuntimeError):
@@ -73,6 +83,8 @@ class Request:
     admit_s: float = -1.0            # prefill finished, first token emitted
     finish_s: float = -1.0
     bucket: int = 0                  # padded prefill length
+    admit_tick: int = -1             # engine tick that admitted the request
+    plan_generation: int = 0         # plan generation at admission time
 
     @property
     def queue_wait_s(self) -> float:
@@ -115,6 +127,45 @@ def cache_insert(full_cache, one_cache, slot: int):
         jax.tree_util.tree_structure(full_cache), out)
 
 
+def _block(tree) -> None:
+    """Wait for every device buffer in a pytree (warm-up barrier)."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+@dataclass
+class PlanGeneration:
+    """One traced serving plan: the merged offload pattern plus the jitted
+    prefill/decode entry points compiled for it.
+
+    The engine serves exactly one generation at a time.  An online
+    replanner builds the NEXT one off the tick path
+    (``ServeEngine.prepare_plan`` — traces jitted and pre-warmed, safe on a
+    background thread) and stages it with ``ServeEngine.offer_plan``.  The
+    swap itself is a pointer assignment between ticks: ``step()`` installs
+    the pending generation before admitting or decoding, so
+
+    * no tick ever runs half-old half-new traces,
+    * no tick blocks on search or compilation (both happened off-thread),
+    * in-flight requests keep their KV cache rows — the cache layout
+      depends only on (cfg, slots, ctx), never on the offload pattern,
+    * a request's token stream does not depend on when (or whether) a
+      swap landed, for patterns with identical numerics.
+
+    ``generation`` is assigned by the engine when the generation is
+    installed (the generation counter); ``key`` is the canonical pattern
+    identity (``search.impl_key`` of the merged impl) — generations with
+    equal keys share traces and a swap between them is a no-op.
+    """
+    impl: Impl                          # merged pattern the traces dispatch
+    key: tuple                          # canonical identity (search.impl_key)
+    prefill: Callable                   # jitted bucketed prefill
+    decode: Callable                    # jitted batched decode step
+    generation: int = 0                 # assigned at install time
+    plan_seconds: Optional[float] = None  # planner's measured seconds, if any
+
+
 class ServeEngine:
     """Continuous-batching serving engine — the single serving path.
 
@@ -134,6 +185,11 @@ class ServeEngine:
     * ``impl``               — offload pattern ({region -> variant}, e.g.
       the planner's ``PlanReport.best_impl()``); None = architectural
       defaults.  Planner patterns override the arch defaults per region.
+
+    Online replanning (``serving/replan.py``) swaps the served pattern
+    while requests are in flight: ``prepare_plan`` builds the new traces
+    off-thread, ``offer_plan`` stages them, and ``step`` installs the swap
+    between ticks under the ``plan_generation`` counter.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
@@ -143,22 +199,14 @@ class ServeEngine:
         self.slots = slots
         self.ctx = ctx
         self.seed = seed
-        if impl is not None:        # planner patterns override arch defaults
-            impl = Impl({**F.default_impl(cfg), **impl})
-        raw_prefill = F.make_bucketed_prefill_step(cfg, impl=impl, ctx=ctx)
-
-        def counted_prefill(params, batch, length):
-            # body runs at trace time only: counts one compilation per
-            # (bucket, frontend-structure) — the trace-count tests read this
-            self.prefill_traces += 1
-            return raw_prefill(params, batch, length)
-
-        self._prefill = jax.jit(counted_prefill)
-        self._decode = jax.jit(F.make_serve_step(cfg, impl=impl))
         self._sample = jax.jit(make_sampler(seed))
         self._argmax = jax.jit(lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         self.prefill_traces = 0
         self.buckets_seen: set[int] = set()
+        # (bucket, frontend signature) shapes actually prefilled — what
+        # prepare_plan warms so a swapped-in generation compiles nothing
+        # on the tick path
+        self._prefill_shapes: set[tuple] = set()
         self.cache = F.init_cache(cfg, slots, ctx)
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
@@ -169,7 +217,128 @@ class ServeEngine:
         self._temps = np.zeros(slots, np.float32)
         self._top_ks = np.zeros(slots, np.int32)
         self.finished: list[Request] = []
+        self.finished_total = 0          # lifetime count, survives drain
         self._next_rid = 0
+        # ---- plan generations (online replanning) ----
+        self.ticks = 0                   # completed step() calls
+        self.plan_generation = 0         # bumped at every installed swap
+        self.swaps = 0
+        self.swap_ticks: list[int] = []  # tick number each swap landed before
+        self._plan_lock = threading.Lock()
+        self._pending_plan: Optional[PlanGeneration] = None
+        self._trace_memo: dict[tuple, tuple] = {}
+        self._warm_cache = None          # template cache for off-thread warms
+        self._replanner = None
+        self._events: deque[dict] = deque(maxlen=_EVENT_CAPACITY)
+        self._gen = self._generation_for(impl)
+
+    # ------------------------------------------------------------------
+    # plan generations
+    # ------------------------------------------------------------------
+    def _generation_for(self, impl,
+                        plan_seconds: Optional[float] = None) -> PlanGeneration:
+        """Build (or reuse from the per-engine trace memo) the jitted
+        prefill/decode pair for ``impl`` merged over the arch defaults.
+        Thread-safe; does not install anything."""
+        merged = Impl({**F.default_impl(self.cfg), **dict(impl or {})})
+        key = impl_key(merged)
+        with self._plan_lock:
+            cached = self._trace_memo.get(key)
+        if cached is None:
+            raw_prefill = F.make_bucketed_prefill_step(self.cfg, impl=merged,
+                                                       ctx=self.ctx)
+
+            def counted_prefill(params, batch, length):
+                # body runs at trace time only: counts one compilation per
+                # (bucket, frontend-structure) — the trace-count tests read
+                # this; warm-up compiles on a background thread count too
+                self.prefill_traces += 1
+                return raw_prefill(params, batch, length)
+
+            built = (jax.jit(counted_prefill),
+                     jax.jit(F.make_serve_step(self.cfg, impl=merged)))
+            with self._plan_lock:
+                # two threads may have built concurrently: first one wins so
+                # both use the same jitted objects (shared dispatch cache)
+                cached = self._trace_memo.setdefault(key, built)
+        return PlanGeneration(impl=merged, key=key, prefill=cached[0],
+                              decode=cached[1], plan_seconds=plan_seconds)
+
+    def prepare_plan(self, impl=None, *, plan_seconds: Optional[float] = None,
+                     warm: bool = True) -> PlanGeneration:
+        """Build the traces for ``impl`` WITHOUT installing them.
+
+        Safe to call from a background thread while the engine keeps
+        ticking: it touches no serving state.  With ``warm`` (default) the
+        new decode step and every prefill shape the engine has served are
+        executed once against a throwaway template cache, so the jit
+        dispatch cache is hot and the post-swap tick pays zero compilation.
+        The returned generation is staged with :meth:`offer_plan`."""
+        gen = self._generation_for(impl, plan_seconds)
+        if warm:
+            self._warm(gen)
+        return gen
+
+    def _warm(self, gen: PlanGeneration) -> None:
+        if self._warm_cache is None:
+            self._warm_cache = F.init_cache(self.cfg, self.slots, self.ctx)
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        _block(gen.decode(self.params, self._warm_cache, toks, pos))
+        for bucket, fe_sig in sorted(self._prefill_shapes,
+                                     key=lambda t: (t[0], t[1] or ())):
+            batch = {"tokens": jnp.zeros((1, bucket), jnp.int32)}
+            if fe_sig is not None:
+                key, shape, dtype = fe_sig
+                batch[key] = jnp.zeros((1,) + tuple(shape), dtype)
+            _block(gen.prefill(self.params, batch,
+                               jnp.asarray(bucket, jnp.int32)))
+
+    def offer_plan(self, prepared: PlanGeneration) -> None:
+        """Stage ``prepared`` for installation at the next tick boundary.
+
+        Thread-safe; the latest offer wins.  The engine installs it at the
+        top of the next ``step()`` — never mid-tick — bumping
+        ``plan_generation``.  Offering a generation whose canonical key
+        equals the serving one is a no-op (no counter bump)."""
+        with self._plan_lock:
+            self._pending_plan = prepared
+
+    def _install_pending(self) -> None:
+        with self._plan_lock:
+            prepared, self._pending_plan = self._pending_plan, None
+        if prepared is None or prepared.key == self._gen.key:
+            return
+        self.plan_generation += 1
+        prepared.generation = self.plan_generation
+        self._gen = prepared
+        self.swaps += 1
+        self.swap_ticks.append(self.ticks)
+
+    @property
+    def plan_key(self) -> tuple:
+        """Canonical identity of the serving pattern (``search.impl_key``)."""
+        return self._gen.key
+
+    @property
+    def plan_impl(self) -> Impl:
+        """The merged offload pattern currently serving (a copy)."""
+        return Impl(dict(self._gen.impl))
+
+    @property
+    def plan_seconds(self) -> Optional[float]:
+        """The serving plan's measured seconds (None when never measured,
+        e.g. the constructor-installed pattern)."""
+        return self._gen.plan_seconds
+
+    def attach_replanner(self, replanner) -> None:
+        """Hook a ``serving.replan.Replanner``: its ``on_tick(engine)`` runs
+        after every tick (trigger evaluation only — search and trace
+        building happen off the tick path)."""
+        self._replanner = replanner
+        attach = getattr(replanner, "attach", None)
+        if attach is not None:
+            attach(self)
 
     # ------------------------------------------------------------------
     def _request_n_front(self, frontend) -> int:
@@ -241,12 +410,16 @@ class ServeEngine:
         req.finish_s = time.perf_counter()
         req.frontend = None          # only needed for prefill; don't pin the
         self.finished.append(req)    # patch/frame array for the engine's life
+        self.finished_total += 1
         self.active[slot] = None
         self._temps[slot] = 0.0
         self._top_ks[slot] = 0
 
-    def _admit(self) -> None:
-        """Admit queued requests into every free slot (multiple per tick)."""
+    def _admit(self) -> list[tuple[int, int]]:
+        """Admit queued requests into every free slot (multiple per tick).
+        Returns the (bucket, prompt_len) pairs admitted this tick — the
+        windowed stats view aggregates them."""
+        admitted: list[tuple[int, int]] = []
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
@@ -256,15 +429,21 @@ class ServeEngine:
             n = req.tokens.size
             bucket = F.prefill_bucket(n, self.ctx - n_front)
             req.bucket = bucket
+            req.admit_tick = self.ticks
+            req.plan_generation = self.plan_generation
             self.buckets_seen.add(bucket)
             padded = np.zeros(bucket, np.int32)
             padded[:n] = req.tokens
             batch = {"tokens": jnp.asarray(padded[None, :])}
+            fe_sig = None
             if req.frontend is not None:
                 key = "patches" if self.cfg.frontend == "siglip_stub" else "frames"
-                batch[key] = jnp.asarray(req.frontend[None])
-            logits, one_cache = self._prefill(self.params, batch,
-                                              jnp.asarray(n, jnp.int32))
+                fe = jnp.asarray(req.frontend[None])
+                batch[key] = fe
+                fe_sig = (key, tuple(fe.shape[1:]), str(fe.dtype))
+            self._prefill_shapes.add((bucket, fe_sig))
+            logits, one_cache = self._gen.prefill(self.params, batch,
+                                                  jnp.asarray(n, jnp.int32))
             self.cache = cache_insert(self.cache, one_cache, slot)
             first = int(self._sample_tokens(
                 logits[:, -1], [req.rid], [0],
@@ -277,15 +456,20 @@ class ServeEngine:
             self._rids[slot] = req.rid
             self._temps[slot] = req.sampling.temperature
             self._top_ks[slot] = req.sampling.top_k
+            admitted.append((bucket, n))
             if len(req.generated) >= req.max_new_tokens:
                 self._retire(slot)      # single-token request: done at prefill
+        return admitted
 
-    def _tick_decode(self) -> None:
-        if not any(r is not None for r in self.active):
-            return
+    def _tick_decode(self) -> int:
+        """One batched decode step; returns the number of slots decoded."""
+        decoding = sum(r is not None for r in self.active)
+        if not decoding:
+            return 0
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        logits, self.cache = self._gen.decode(self.params, self.cache,
+                                              toks, pos)
         steps = np.asarray([len(r.generated) if r is not None else 0
                             for r in self.active], np.int32)
         nxt = self._sample_tokens(logits[:, -1], self._rids, steps,
@@ -298,10 +482,25 @@ class ServeEngine:
             self.last_tok[slot] = nxt[slot]
             if len(req.generated) >= req.max_new_tokens:
                 self._retire(slot)
+        return decoding
 
     def step(self) -> None:
-        self._admit()
-        self._tick_decode()
+        """One engine tick: install any pending plan (the hot-swap point —
+        strictly between ticks), admit, decode, record the tick event, then
+        let an attached replanner evaluate its triggers."""
+        self.ticks += 1
+        self._install_pending()
+        admitted = self._admit()
+        decoded = self._tick_decode()
+        self._events.append({
+            "tick": self.ticks,
+            "active": sum(r is not None for r in self.active),
+            "queue": len(self.queue),
+            "decode_tokens": decoded,
+            "admitted": admitted,
+        })
+        if self._replanner is not None:
+            self._replanner.on_tick(self)
 
     def run_to_completion(self, max_ticks: int = 10_000, *,
                           raise_incomplete: bool = True) -> list[Request]:
@@ -324,21 +523,56 @@ class ServeEngine:
         """Return and clear the finished list.  Long-lived engines serving a
         continuous stream should drain periodically — ``finished`` otherwise
         grows with every request ever served (``stats()`` aggregates only
-        what is currently retained)."""
+        what is currently retained; ``finished_total`` and the windowed view
+        survive draining)."""
         done, self.finished = sorted(self.finished, key=lambda r: r.rid), []
         return done
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
-        """Aggregate lifecycle stats over finished requests.
+    def _counts(self) -> dict:
+        """Conserved lifecycle accounting, present in both stats views:
+        ``requests_submitted == requests_finished_total + requests_pending
+        + requests_active`` at every tick boundary (the harness asserts it)."""
+        active = sum(r is not None for r in self.active)
+        return {
+            "requests_submitted": self._next_rid,
+            "requests_pending": len(self.queue),
+            "requests_active": active,
+            "requests_finished_total": self.finished_total,
+            "ticks": self.ticks,
+            "plan_generation": self.plan_generation,
+            "swaps": self.swaps,
+            "slot_occupancy": active / self.slots if self.slots else 0.0,
+        }
 
-        Keys: ``requests_finished``, ``generated_tokens``, ``ttft_s_mean``
-        / ``ttft_s_p50`` (time to first token), ``queue_wait_s_mean``,
+    def stats(self, window: Optional[int] = None) -> dict:
+        """Serving statistics, in two views.
+
+        ``stats()`` aggregates lifecycle stats over *finished* requests:
+        ``requests_finished``, ``generated_tokens``, ``ttft_s_mean`` /
+        ``ttft_s_p50`` (time to first token), ``queue_wait_s_mean``,
         ``decode_tps_mean`` (per-request decode tokens/sec), plus compile
         telemetry: ``prefill_traces`` (one per (bucket, frontend) shape)
-        and ``buckets`` (sorted bucket lengths seen).  These are the
-        measurement conditions ROADMAP's online-replanning item feeds back
-        into the planner."""
+        and ``buckets`` (sorted bucket lengths seen).
+
+        ``stats(window=N)`` is the windowed in-flight view over the last N
+        ticks — what a drift detector must read, since the finished-only
+        aggregate is blind to a long-running regime until its requests
+        complete.  Keys: ``bucket_hist`` (admissions per prefill bucket,
+        including still-running requests), ``prompt_len_mean``,
+        ``occupancy_mean`` (active slots / slots per tick),
+        ``queue_depth_mean``, ``decode_tokens``, ``decode_prefill_ratio``
+        (decode steps per admission), ``requests_admitted``,
+        ``ticks_observed``.
+
+        Both views carry the conserved counters (``requests_submitted``,
+        ``requests_pending``, ``requests_active``,
+        ``requests_finished_total``) and the replanning telemetry
+        (``ticks``, ``plan_generation``, ``swaps``, ``slot_occupancy``).
+        The windowed view is the measurement-conditions feed for online
+        replanning (``core.planner.conditions_from_stats``)."""
+        if window is not None:
+            return self._stats_windowed(int(window))
         done = self.finished
         ttfts = [r.ttft_s for r in done if r.ttft_s >= 0]
         waits = [r.queue_wait_s for r in done if r.slot_s >= 0]
@@ -352,4 +586,34 @@ class ServeEngine:
             "decode_tps_mean": float(np.mean(tps)) if tps else 0.0,
             "prefill_traces": self.prefill_traces,
             "buckets": sorted(self.buckets_seen),
+            **self._counts(),
+        }
+
+    def _stats_windowed(self, window: int) -> dict:
+        lo = self.ticks - max(window, 0)
+        events = [e for e in self._events if e["tick"] > lo]
+        buckets: Counter = Counter()
+        lens: list[int] = []
+        occ: list[float] = []
+        qdepth: list[int] = []
+        decode_tokens = 0
+        for e in events:
+            occ.append(e["active"] / self.slots if self.slots else 0.0)
+            qdepth.append(e["queue"])
+            decode_tokens += e["decode_tokens"]
+            for bucket, plen in e["admitted"]:
+                buckets[bucket] += 1
+                lens.append(plen)
+        admitted = len(lens)
+        return {
+            "window": window,
+            "ticks_observed": len(events),
+            "requests_admitted": admitted,
+            "bucket_hist": dict(sorted(buckets.items())),
+            "prompt_len_mean": float(np.mean(lens)) if lens else 0.0,
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "queue_depth_mean": float(np.mean(qdepth)) if qdepth else 0.0,
+            "decode_tokens": decode_tokens,
+            "decode_prefill_ratio": decode_tokens / max(admitted, 1),
+            **self._counts(),
         }

@@ -12,11 +12,12 @@ import pytest
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ROOT / "docs"
 PAGES = ("architecture.md", "search-strategies.md", "plan-cache.md",
-         "loop-extraction.md")
+         "loop-extraction.md", "serving-replanning.md")
 
 # the public surfaces the ISSUE-4 API pass documents: module -> symbols
 DOCUMENTED = {
-    "repro.core.planner": ["AutoOffloader", "PlannerConfig", "PlanReport"],
+    "repro.core.planner": ["AutoOffloader", "PlannerConfig", "PlanReport",
+                           "conditions_from_stats"],
     "repro.core.strategies": ["SearchStrategy", "SearchState",
                               "SearchCandidate", "StagedSearch",
                               "GeneticSearch", "ExhaustiveSearch",
@@ -41,7 +42,9 @@ DOCUMENTED = {
                            "enumerate_sites", "FAMILIES"],
     "repro.core.intensity": ["RegionAnalysis", "analyze_region",
                              "count_loops", "alignment_penalty"],
-    "repro.serving.engine": ["ServeEngine"],
+    "repro.serving.engine": ["ServeEngine", "PlanGeneration"],
+    "repro.serving.replan": ["Replanner", "ReplanConfig", "DriftDetector",
+                             "DriftConfig"],
 }
 
 

@@ -296,3 +296,132 @@ def test_planner_persists_and_reloads_cost_model_state(tmp_path):
         prog, jax.random.PRNGKey(1), cache=cache)
     assert not rep2.from_cache                   # different budget, new key
     assert ghost[0] in rep2.cost_model_state["delta"]
+
+
+# ---------------------------------------------------------------------------
+# Robustness under corruption and concurrency (ISSUE 9 S3): a damaged
+# entry degrades to a cache-miss for that key, never a crash; writes are
+# atomic; concurrent instances sharing the file stay sound.
+# ---------------------------------------------------------------------------
+_GOOD_ENTRY = {"program": "p", "backend": "cpu", "best_pattern": {"r": "offload"},
+               "speedup": 1.5, "created_at": "2026-01-01T00:00:00+00:00"}
+
+
+def test_plan_cache_corrupt_entry_degrades_to_miss(tmp_path):
+    """One garbage value inside an otherwise-valid file (a writer died
+    mid-thought, a hand edit went wrong) must be a miss for THAT key only —
+    the healthy siblings keep hitting."""
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 1, "entries": {
+        "good": _GOOD_ENTRY, "bad_str": "garbage", "bad_num": 42,
+        "bad_null": None, "bad_list": [1, 2]}}))
+    cache = PlanCache(path)
+    assert len(cache) == 1
+    assert cache.get("good")["best_pattern"] == {"r": "offload"}
+    for key in ("bad_str", "bad_num", "bad_null", "bad_list"):
+        assert cache.get(key) is None             # miss, not crash
+    # the next write drops the garbage from disk for good
+    cache.put("k", {"best_pattern": {}, "speedup": 1.0})
+    on_disk = json.loads(path.read_text())["entries"]
+    assert set(on_disk) == {"good", "k"}
+    # an in-process put of a non-dict is equally a miss on read-back
+    cache._data["entries"]["live_bad"] = "oops"
+    assert cache.get("live_bad") is None
+
+
+def test_plan_cache_corrupt_measurement_rows_are_skipped(tmp_path):
+    """Ledger priming must survive damaged measurement material: a corrupt
+    measurements field skips that entry, a corrupt row skips that row."""
+    path = tmp_path / "plans.json"
+    ok_row = {"impl": {"r": "offload"}, "run_seconds": 1e-3, "ok": True}
+    path.write_text(json.dumps({"version": 1, "entries": {
+        "broken_field": {"measurement_key": "mk", "created_at": "a",
+                         "measurements": "not-a-list"},
+        "broken_rows": {"measurement_key": "mk", "created_at": "b",
+                        "measurements": ["junk", 7, {"impl": "not-a-dict"},
+                                         {"impl": {}}, ok_row]},
+        "wrong_key": {"measurement_key": "other", "created_at": "c",
+                      "measurements": [{"impl": {"x": "fast"}}]},
+    }}))
+    cache = PlanCache(path)
+    primed = cache.measurements_for("mk")
+    assert primed == [ok_row]                     # only the sound row
+    assert cache.cost_model_for("mk") == {}       # absent/garbage -> empty
+
+
+def test_plan_cache_truncated_file_is_cold_not_fatal(tmp_path):
+    """A file cut mid-write (pre-atomic-rename crash analogue) is a cold
+    cache, and the next put() restores a sound store."""
+    path = tmp_path / "plans.json"
+    full = json.dumps({"version": 1, "entries": {"good": _GOOD_ENTRY}})
+    path.write_text(full[: len(full) // 2])
+    cache = PlanCache(path)
+    assert len(cache) == 0
+    cache.put("k", {"best_pattern": {}, "speedup": 1.0})
+    assert "k" in PlanCache(path)
+    json.loads(path.read_text())                  # valid JSON again
+
+
+def test_plan_cache_atomic_write_preserves_old_file(tmp_path, monkeypatch):
+    """Writes go tmp + rename: when the rename fails (disk full, kill -9
+    analogue), the published file still holds the previous sound state —
+    never a half-written one."""
+    import pathlib
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    cache.put("k1", {"best_pattern": {}, "speedup": 1.0})
+    before = path.read_text()
+
+    def boom(self, target):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(pathlib.Path, "replace", boom)
+    with pytest.raises(OSError):
+        cache.put("k2", {"best_pattern": {}, "speedup": 1.0})
+    monkeypatch.undo()
+    assert path.read_text() == before             # old state intact
+    fresh = PlanCache(path)
+    assert "k1" in fresh and "k2" not in fresh
+
+
+def test_plan_cache_concurrent_instances_stay_sound(tmp_path):
+    """Threaded writers (each with its own PlanCache on the shared file,
+    the multi-process analogue) plus concurrent readers: no crash, the
+    file stays valid JSON, every surviving entry is sane, and each
+    writer's own keys are visible to itself."""
+    import threading
+    path = tmp_path / "plans.json"
+    errors = []
+
+    def writer(wid):
+        try:
+            c = PlanCache(path)
+            for i in range(8):
+                c.put(f"w{wid}_{i}", {"best_pattern": {}, "speedup": 1.0,
+                                      "measurement_key": "mk",
+                                      "measurements": [
+                                          {"impl": {f"r{wid}": "offload"}}]})
+            assert all(f"w{wid}_{i}" in c for i in range(8))
+        except BaseException as e:  # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(20):
+                c = PlanCache(path)
+                c.measurements_for("mk")
+                len(c)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+    threads += [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors
+    final = json.loads(path.read_text())
+    assert final["version"] == 1
+    assert all(isinstance(v, dict) for v in final["entries"].values())
+    assert not list(tmp_path.glob("*.tmp"))       # no tmp litter left behind

@@ -1,0 +1,400 @@
+"""Online replanning: drift detection, windowed stats, and the zero-downtime
+plan hot-swap contract (ISSUE 9 acceptance).
+
+The tentpole invariant, asserted here through the serving harness: under
+scripted drift, a replanning engine finishes every request with greedy token
+streams bit-identical to a never-swapped engine, the swap lands between
+ticks (no tick blocked on search or compile), and a warm re-opened search
+consumes zero measurement budget on ledger-primed patterns.
+"""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from serving_harness import (DRIFT_SHORT_TO_LONG, Phase, ScriptedTraffic,
+                             assert_streams_equal, check_conservation, drive)
+
+from repro.configs import get_config
+from repro.core.plan_cache import (PlanCache, measurement_cache_key,
+                                   plan_cache_key)
+from repro.core.planner import (AutoOffloader, PlannerConfig,
+                                conditions_from_stats)
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import Impl, dispatch, register_variant, variants
+from repro.models import factory as F
+from repro.serving.engine import ServeEngine
+from repro.serving.replan import (DriftConfig, DriftDetector, ReplanConfig,
+                                  Replanner)
+
+KEY = jax.random.PRNGKey(0)
+_CTX_BOX: list = []
+
+
+def _ctx():
+    """Module-shared (cfg, params) — float32 so greedy argmax is exact and
+    module-level so hypothesis examples don't rebuild params."""
+    if not _CTX_BOX:
+        cfg = dataclasses.replace(get_config("qwen2-72b").reduced(),
+                                  dtype="float32")
+        _CTX_BOX.append((cfg, F.init_params(cfg, KEY)))
+    return _CTX_BOX[0]
+
+
+def _engine(**kw):
+    cfg, params = _ctx()
+    kw.setdefault("slots", 2)
+    kw.setdefault("ctx", 32)
+    return ServeEngine(cfg, params, seed=0, **kw)
+
+
+class _Report:
+    """Scripted PlanReport stand-in: the replanner only reads best_impl()
+    and best_seconds."""
+
+    def __init__(self, impl, best_seconds=1e-6):
+        self.best_pattern = dict(impl)
+        self.best_seconds = best_seconds
+        self.measurements = []
+        self.reused = []
+
+    def best_impl(self):
+        return Impl(self.best_pattern)
+
+
+def _wstats(hist, occ=0.5, ratio=4.0):
+    """Synthetic windowed stats for detector unit tests."""
+    return {"bucket_hist": dict(hist), "occupancy_mean": occ,
+            "decode_prefill_ratio": ratio, "ticks_observed": 8}
+
+
+# ---------------------------------------------------------------------------
+# conditions + drift detector units
+# ---------------------------------------------------------------------------
+def test_conditions_from_stats_bands():
+    c = conditions_from_stats(_wstats({8: 3, 16: 3}, occ=0.9, ratio=6.0))
+    # tie on counts favors the longer bucket; 0.9 occupancy is "high";
+    # floor(log2(1 + 6)) = 2
+    assert c == {"dominant_bucket": 16, "occupancy_band": "high",
+                 "decode_prefill_band": 2}
+    assert conditions_from_stats(_wstats({}, occ=0.1, ratio=0.0)) == {
+        "dominant_bucket": 0, "occupancy_band": "low",
+        "decode_prefill_band": 0}
+    # determinism: equal stats -> equal conditions
+    s = _wstats({8: 5, 32: 1}, occ=0.5, ratio=2.5)
+    assert conditions_from_stats(s) == conditions_from_stats(s)
+
+
+def test_drift_detector_fires_with_hysteresis():
+    det = DriftDetector(DriftConfig(hysteresis=2, cooldown=0))
+    assert det.observe(_wstats({8: 10}), tick=0) is False   # anchors
+    assert det.observe(_wstats({8: 10}), tick=1) is False   # same regime
+    shifted = _wstats({16: 10})
+    assert det.observe(shifted, tick=2) is False            # streak 1 of 2
+    assert det.observe(shifted, tick=3) is True             # fires
+    assert det.fired == 1
+    assert det.last_distance["bucket_l1"] == pytest.approx(2.0)
+
+
+def test_drift_detector_hysteresis_suppresses_single_window_blip():
+    det = DriftDetector(DriftConfig(hysteresis=2, cooldown=0))
+    det.observe(_wstats({8: 10}), tick=0)
+    fired = []
+    for tick, hist in enumerate(({16: 10}, {8: 10}, {16: 10}, {8: 10}),
+                                start=1):
+        fired.append(det.observe(_wstats(hist), tick))
+    assert fired == [False] * 4 and det.fired == 0
+
+
+def test_drift_detector_cooldown_prevents_flapping():
+    det = DriftDetector(DriftConfig(hysteresis=1, cooldown=10))
+    det.observe(_wstats({8: 10}), tick=0)     # anchor; cooldown until 10
+    assert det.observe(_wstats({16: 10}), tick=5) is False
+    assert det.observe(_wstats({16: 10}), tick=10) is True
+    # fired -> new cooldown: the still-drifted regime cannot re-fire at once
+    assert det.observe(_wstats({16: 10}), tick=12) is False
+    assert det.fired == 1
+
+
+def test_drift_detector_occupancy_and_ratio_signals():
+    det = DriftDetector(DriftConfig(hysteresis=1, cooldown=0,
+                                    occupancy_delta=0.3, ratio_rel=1.0))
+    det.observe(_wstats({8: 4}, occ=0.2, ratio=4.0), tick=0)
+    assert det.observe(_wstats({8: 4}, occ=0.9, ratio=4.0), tick=1) is True
+    det2 = DriftDetector(DriftConfig(hysteresis=1, cooldown=0))
+    det2.observe(_wstats({8: 4}, ratio=2.0), tick=0)
+    assert det2.observe(_wstats({8: 4}, ratio=8.0), tick=1) is True
+    # near-idle ratios on both sides never count as balance drift
+    det3 = DriftDetector(DriftConfig(hysteresis=1, cooldown=0))
+    det3.observe(_wstats({8: 4}, ratio=0.0), tick=0)
+    assert det3.observe(_wstats({8: 4}, ratio=0.3), tick=1) is False
+
+
+# ---------------------------------------------------------------------------
+# windowed / in-flight stats (the stats() blindness fix)
+# ---------------------------------------------------------------------------
+def test_stats_window_sees_inflight_requests():
+    eng = _engine()
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=25)
+    for _ in range(3):
+        eng.step()
+    s, w = eng.stats(), eng.stats(window=8)
+    # the finished-only aggregate is blind to the long-running request...
+    assert s["requests_finished"] == 0 and s["generated_tokens"] == 0
+    # ...but both views carry the conserved counters,
+    assert s["requests_active"] == 1 and w["requests_active"] == 1
+    # and the windowed view sees the admission and the running decode
+    assert w["bucket_hist"] == {8: 1}
+    assert w["requests_admitted"] == 1
+    assert w["decode_tokens"] == 3
+    assert w["occupancy_mean"] == pytest.approx(0.5)
+    assert w["prompt_len_mean"] == pytest.approx(5.0)
+    check_conservation(eng)
+
+
+def test_stats_window_bounds_and_ratio():
+    eng = _engine()
+    drive(eng, ScriptedTraffic((Phase(ticks=5, per_tick=1, max_new=4),),
+                               seed=1))
+    w1, wall = eng.stats(window=1), eng.stats(window=10_000)
+    assert w1["ticks_observed"] == 1
+    assert wall["ticks_observed"] == eng.ticks
+    assert wall["requests_admitted"] == wall["requests_finished_total"] == 5
+    assert wall["decode_prefill_ratio"] == pytest.approx(
+        wall["decode_tokens"] / 5)
+
+
+def test_stats_conservation_survives_drain():
+    eng = _engine()
+    drive(eng, ScriptedTraffic((Phase(ticks=3, per_tick=2),), seed=2))
+    assert eng.stats()["requests_finished_total"] == 6
+    eng.drain_finished()
+    assert eng.stats()["requests_finished"] == 0          # view drained...
+    assert eng.stats()["requests_finished_total"] == 6    # ...counter survives
+    check_conservation(eng)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap mechanics
+# ---------------------------------------------------------------------------
+def test_offer_same_key_is_noop_and_trace_memo_reuses():
+    eng = _engine()
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    eng.step()
+    traces0 = eng.prefill_traces
+    same = eng.prepare_plan(None)                 # arch defaults again
+    assert same.key == eng.plan_key
+    assert same.prefill is eng._gen.prefill       # memo: same jitted objects
+    assert traces0 == eng.prefill_traces          # warm hit the jit cache
+    eng.offer_plan(same)
+    eng.step()
+    assert eng.swaps == 0 and eng.plan_generation == 0
+    # a genuinely different pattern does swap — and swapping BACK reuses
+    # the original generation's traces without recompiling
+    eng.offer_plan(eng.prepare_plan({"replan_probe": "offload"}))
+    eng.step()
+    assert eng.swaps == 1 and eng.plan_generation == 1
+    traces1 = eng.prefill_traces
+    eng.offer_plan(eng.prepare_plan(None))
+    eng.step()
+    assert eng.swaps == 2 and eng.prefill_traces == traces1
+    eng.run_to_completion()
+
+
+def test_request_records_admit_tick_and_plan_generation():
+    eng = _engine()
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=3)
+    eng.step()
+    eng.offer_plan(eng.prepare_plan({"replan_probe": "offload"}))
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=3)
+    done = eng.run_to_completion()
+    assert done[0].admit_tick == 1 and done[0].plan_generation == 0
+    assert done[1].plan_generation == 1           # admitted after the swap
+    assert eng.swap_ticks == [2]                  # installed before tick 2 ran
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: scripted drift, sync replanner, bit-identical streams
+# ---------------------------------------------------------------------------
+def test_hot_swap_bit_identical_under_scripted_drift():
+    """A drift-triggered hot-swap to a real offload variant must be
+    invisible in the token streams: same requests, same tokens, nothing
+    dropped, swap strictly between ticks."""
+    reference = drive(_engine(), ScriptedTraffic(DRIFT_SHORT_TO_LONG, seed=7))
+
+    eng = _engine()
+    detector = DriftDetector(DriftConfig(
+        window=4, bucket_l1=0.5, occupancy_delta=2.0, ratio_rel=100.0,
+        hysteresis=2, cooldown=4))
+    replanner = Replanner(
+        lambda conditions: _Report({"mlp_core": "offload"}),
+        config=ReplanConfig(on_drift=True, background=False, window=4),
+        detector=detector)
+    eng.attach_replanner(replanner)
+    done = drive(eng, ScriptedTraffic(DRIFT_SHORT_TO_LONG, seed=7))
+
+    assert detector.fired >= 1 and replanner.offers >= 1
+    assert eng.swaps >= 1 and eng.plan_generation == eng.swaps
+    # the swap landed between ticks, mid-stream: requests admitted before it
+    # were still decoding (their KV caches crossed the swap untouched)
+    swap_tick = eng.swap_ticks[0]
+    assert any(r.admit_tick < swap_tick
+               and r.admit_tick + r.max_new_tokens > swap_tick for r in done)
+    assert eng.plan_impl.pick("mlp_core") == "offload"
+    assert eng.plan_seconds == pytest.approx(1e-6)
+    # no dropped/re-queued requests and bit-identical greedy streams
+    assert_streams_equal(reference, done)
+    # the replanner re-anchored on the new regime: no flapping swap storm
+    assert eng.swaps <= 2
+
+
+def test_background_replan_never_blocks_ticks():
+    """The search runs on a worker thread while the engine keeps ticking;
+    the swap installs at the first tick boundary after the offer."""
+    started, release = threading.Event(), threading.Event()
+
+    def plan_fn(conditions):
+        started.set()
+        assert release.wait(timeout=60), "test driver never released plan_fn"
+        return _Report({"replan_probe": "offload"})
+
+    def submit_all(eng):
+        for i in range(3):
+            eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=20)
+
+    eng = _engine()
+    replanner = Replanner(plan_fn, config=ReplanConfig(every_ticks=2,
+                                                       background=True,
+                                                       window=4))
+    eng.attach_replanner(replanner)
+    submit_all(eng)
+    eng.step()                                    # interval trigger fires
+    assert started.wait(timeout=60), "background search never started"
+    ticks_before = eng.ticks
+    for _ in range(4):                            # search still blocked...
+        eng.step()
+    assert eng.ticks == ticks_before + 4          # ...yet ticks kept flowing
+    assert eng.swaps == 0
+    release.set()
+    replanner.join(timeout=60)
+    assert replanner.offers == 1 and replanner.last_error is None
+    boundary = eng.ticks
+    eng.step()
+    assert eng.swaps == 1 and eng.swap_ticks == [boundary + 1]
+    done = eng.run_to_completion()
+
+    ref = _engine()
+    submit_all(ref)
+    assert_streams_equal(ref.run_to_completion(), done)
+
+
+# ---------------------------------------------------------------------------
+# warm re-open on the real planner: regime re-keys the plan, ledger priming
+# keeps the budget at zero
+# ---------------------------------------------------------------------------
+_TOY = [0]
+
+
+def _toy_program(plan_extra=None):
+    n = f"rpz_{_TOY[0]}"
+
+    def _ref(x):
+        def body(i, acc):
+            return acc + 1e-6 * jnp.sin(acc * 1e-3)
+        return jax.lax.fori_loop(0, 200, body, x)
+
+    register_variant(n, "ref")(_ref)
+    register_variant(n, "offload")(lambda x: x * 1.0000001)
+
+    def build(impl):
+        def run(x):
+            return dispatch(n, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((64, 64), jnp.float32),)
+    return OffloadableProgram(
+        name="replan_toy", regions=[Region(n, variants(n)["ref"], abstract)],
+        build=build, sample_inputs=lambda k: (jax.random.normal(k, (64, 64)),),
+        plan_extra=dict(plan_extra or {}))
+
+
+def test_warm_reopen_consumes_zero_measurement_budget(tmp_path):
+    """Regime conditions (plan_extra) re-open the search under a new plan
+    key while the measurement key is unchanged — so the re-opened search is
+    fully ledger-primed and spends zero measurement budget."""
+    cache = PlanCache(tmp_path / "plans.json")
+    planner = AutoOffloader(PlannerConfig(max_measurements=4, reps=2,
+                                          warmup=0))
+    prog_a = _toy_program({"occupancy_band": "low", "dominant_bucket": 8})
+    prog_b = _toy_program({"occupancy_band": "high", "dominant_bucket": 16})
+    cfg = planner.config
+    assert plan_cache_key(prog_a, cfg) != plan_cache_key(prog_b, cfg)
+    assert measurement_cache_key(prog_a) == measurement_cache_key(prog_b)
+    # empty plan_extra leaves the pre-regime key unchanged
+    assert plan_cache_key(_toy_program(), cfg) == plan_cache_key(
+        _toy_program({}), cfg)
+
+    rep_a = planner.plan(prog_a, cache=cache)
+    assert not rep_a.from_cache and len(rep_a.measurements) >= 1
+
+    rep_b = planner.plan(prog_b, cache=cache)
+    assert not rep_b.from_cache            # new regime: search re-opened...
+    assert rep_b.measurements == []        # ...on zero measurement budget
+    assert rep_b.reused                    # every pattern ledger-primed
+    assert rep_b.best_pattern == rep_a.best_pattern
+
+
+def test_replanner_skips_slower_plan_and_counts():
+    """The strictly-better gate: once the serving plan carries measured
+    seconds, a not-faster winner is never offered."""
+    eng = _engine()
+    fast = eng.prepare_plan({"replan_probe": "offload"}, plan_seconds=1e-3)
+    eng.offer_plan(fast)
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    eng.step()
+    assert eng.plan_seconds == pytest.approx(1e-3)
+    replanner = Replanner(lambda c: _Report({"mlp_core": "offload"},
+                                            best_seconds=2e-3),
+                          config=ReplanConfig(every_ticks=1,
+                                              background=False))
+    eng.attach_replanner(replanner)
+    eng.run_to_completion()
+    assert replanner.replans >= 1
+    assert replanner.offers == 0 and replanner.skipped_slower >= 1
+    assert eng.swaps == 1                  # only the manual offer above
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings of submit / tick / swap (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.integers(min_value=0, max_value=3),
+                    min_size=4, max_size=10))
+def test_random_interleavings_preserve_streams(ops):
+    """Arbitrary interleavings of submit/tick/swap-offer leave the token
+    streams identical to a never-swapped engine and conserve accounting."""
+    eng, ref = _engine(), _engine()
+    toggle = 0
+    n_submitted = 0
+    for op in ops:
+        if op == 0:
+            eng.step()
+            ref.step()
+            check_conservation(eng)
+        elif op == 1 or op == 2:
+            n = 5 if op == 1 else 12
+            prompt = (np.arange(n) % 97 + 1 + n_submitted).astype(np.int32)
+            eng.submit(prompt, max_new_tokens=4 if op == 1 else 6)
+            ref.submit(prompt, max_new_tokens=4 if op == 1 else 6)
+            n_submitted += 1
+        else:
+            toggle += 1
+            impl = {"hyp_probe": "offload"} if toggle % 2 else None
+            eng.offer_plan(eng.prepare_plan(impl, warm=False))
+    done = drive(eng, ScriptedTraffic((), seed=0))
+    done_ref = drive(ref, ScriptedTraffic((), seed=0))
+    assert_streams_equal(done_ref, done)
+    assert eng.plan_generation == eng.swaps
