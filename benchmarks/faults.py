@@ -1,0 +1,218 @@
+"""Fault-tolerance benchmark: the price of surviving a fault storm, and
+the cost of a mid-serve rollback.
+
+Two rows (``--section faults`` in ``benchmarks.run``):
+
+* ``fault-storm`` — the real ``AutoOffloader`` plans a toy program twice:
+  fault-free, then wrapped by a deterministic ``FaultInjector`` throwing
+  transient flaky failures at every pattern's first run plus a permanent
+  NaN at one gene.  The row reports the retry count and wall overhead of
+  surviving the storm, and *asserts* the two invariants the fault layer
+  promises: the storm run selects the SAME winner as the clean run, and
+  the NaN gene lands in quarantine instead of in the plan.
+* ``rollback`` — a ``ServeEngine`` under steady traffic has a NaN-
+  producing plan hot-swapped in mid-serve.  Per-tick wall times are
+  recorded; the row reports the rollback tick's duration against the
+  median healthy tick (the graceful-degradation claim: rollback is a
+  pointer swap to an already-warm fallback generation, not a recompile)
+  and asserts zero dropped requests.
+
+Both rows carry hard assertions — the benchmark doubles as a gate when
+run directly — and write into ``BENCH_faults.json`` for the trajectory.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --section faults [--json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from statistics import median
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.faults import FaultInjector, FaultSpec, wrap_program
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import (Impl, dispatch, register_variant,
+                                unregister_variant, variants)
+from repro.models import factory as F
+from repro.serving.engine import ServeEngine
+
+ARCH = "qwen2-72b"
+
+_SEQ = [0]
+
+
+def _toy_program():
+    a, b = "faults_bench_a", "faults_bench_b"
+    if not _SEQ[0]:
+        _SEQ[0] = 1
+
+        def _slow_ref(x):
+            def body(i, acc):
+                return acc + 1e-6 * jnp.sin(acc * 1e-3)
+            return jax.lax.fori_loop(0, 200, body, x)
+
+        for name in (a, b):
+            register_variant(name, "ref")(_slow_ref)
+        register_variant(a, "offload")(lambda x: x * 1.0000001)
+        register_variant(b, "offload")(lambda x: x - 1e-7)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((64, 64), jnp.float32),)
+    return OffloadableProgram(
+        name="faults_bench_prog",
+        regions=[Region(a, variants(a)["ref"], abstract),
+                 Region(b, variants(b)["ref"], abstract)],
+        build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (64, 64)),),
+        source_loop_count=2), a, b
+
+
+def bench_fault_storm() -> dict:
+    cfg = PlannerConfig(reps=2, warmup=0, retry_backoff_s=0.0,
+                        compile_timeout_s=30.0, run_timeout_s=30.0,
+                        quarantine_threshold=1)
+    prog, a, b = _toy_program()
+
+    t0 = time.perf_counter()
+    clean = AutoOffloader(cfg).plan(prog)
+    clean_s = time.perf_counter() - t0
+
+    # the storm: every pattern's first timed run fails transiently, and
+    # the b=offload gene is permanently broken (NaN output)
+    inj = FaultInjector(specs=[
+        FaultSpec("flaky", site="run", times=1),
+        FaultSpec("nan", site="run", match=f"{b}=offload", times=0,
+                  transient=False),
+    ])
+    t0 = time.perf_counter()
+    storm = AutoOffloader(cfg).plan(wrap_program(prog, inj))
+    storm_s = time.perf_counter() - t0
+
+    n_injected = inj.fired()
+    measurements = storm.measurements + (
+        [storm.baseline] if storm.baseline is not None else [])
+    n_retries = sum(max(0, m.attempts - 1) for m in measurements)
+    assert n_injected > 0, "the storm never fired"
+    assert n_retries > 0, "transient faults were injected but never retried"
+    # invariant 1: the storm costs retries, never correctness — the clean
+    # winner survives minus the permanently-broken gene
+    assert clean.best_pattern == {a: "offload", b: "offload"}
+    assert storm.best_pattern == {a: "offload"}, (
+        f"storm winner {storm.best_pattern} — the healthy gene must win "
+        "and the NaN gene must not")
+    # invariant 2: the broken gene is quarantined, not selected
+    assert f"{b}=offload" in storm.quarantined, (
+        f"NaN gene missing from quarantine: {storm.quarantined}")
+    return {
+        "app": "faults_bench", "mode": "fault-storm",
+        "n_faults_injected": n_injected,
+        "n_retries": n_retries,
+        "n_quarantined": len(storm.quarantined),
+        "plan_ms_clean": clean_s * 1e3,
+        "plan_ms_storm": storm_s * 1e3,
+        "storm_overhead_x": storm_s / max(clean_s, 1e-9),
+        "speedup": storm.speedup,
+    }
+
+
+def _poison_mlp(x, w_gate, w_up, w_down):
+    ref = variants("mlp_core")["ref"]
+    return ref(x, w_gate, w_up, w_down) * jnp.nan
+
+
+def bench_rollback(seed: int = 0) -> dict:
+    cfg = dataclasses.replace(get_config(ARCH).reduced(), dtype="float32")
+    params = F.init_params(cfg, jax.random.PRNGKey(seed))
+    engine = ServeEngine(cfg, params, slots=2, ctx=48, seed=seed)
+    register_variant("mlp_core", "poison")(_poison_mlp)
+    try:
+        rng = np.random.default_rng(seed)
+        # steady traffic: 12 ticks x 1 request, short prompts
+        schedule = [[(rng.integers(1, 200, size=int(
+            rng.integers(4, 8))).astype(np.int32), 8)] for _ in range(12)]
+
+        tick_s: list[float] = []
+        submitted = 0
+        rollback_tick = None
+        for i, tick_reqs in enumerate(schedule):
+            for prompt, new in tick_reqs:
+                engine.submit(prompt, max_new_tokens=new)
+                submitted += 1
+            if i == 6:      # mid-serve: stage the broken plan for this tick
+                # warm=True mirrors the real replanner: the candidate's
+                # traces compile off the tick path, so the timed fault tick
+                # contains only detect + rollback + retry
+                engine.offer_plan(
+                    engine.prepare_plan({"mlp_core": "poison"}, warm=True))
+            t0 = time.perf_counter()
+            engine.step()
+            tick_s.append(time.perf_counter() - t0)
+            if rollback_tick is None and engine.rollbacks:
+                rollback_tick = len(tick_s)
+        while engine.busy and len(tick_s) < 2000:
+            t0 = time.perf_counter()
+            engine.step()
+            tick_s.append(time.perf_counter() - t0)
+        assert not engine.busy, "drain exceeded tick budget"
+        assert engine.rollbacks == 1, (
+            f"expected exactly one rollback, got {engine.rollbacks}")
+        assert rollback_tick is not None
+        done = engine.finished_total
+        assert done == submitted, (
+            f"rollback dropped requests: {done}/{submitted} finished")
+
+        steady = sorted(tick_s)[: max(1, int(len(tick_s) * 0.9))]
+        med = median(steady)
+        rb_s = tick_s[rollback_tick - 1]
+        # graceful-degradation gate (generous: shared-runner noise): the
+        # rollback tick retries one op on an already-warm fallback — it must
+        # look like a slow tick, never like a recompile (~100x)
+        assert rb_s < 10 * med, (
+            f"rollback tick {rb_s*1e3:.1f} ms vs median {med*1e3:.1f} ms — "
+            "rollback leaked a compile into the tick path")
+        return {
+            "app": ARCH, "mode": "rollback",
+            "rollbacks": engine.rollbacks,
+            "rollback_tick": rollback_tick,
+            "rollback_tick_ms": rb_s * 1e3,
+            "median_tick_ms": med * 1e3,
+            "requests": done,
+        }
+    finally:
+        unregister_variant("mlp_core", "poison")
+
+
+def main(json_path: str | None = None) -> None:
+    rows = [bench_fault_storm(), bench_rollback()]
+    s = rows[0]
+    print(f"{'mode':>12} | {'injected':>8} | {'retries':>7} | "
+          f"{'quarantined':>11} | {'plan clean->storm':>18}")
+    print(f"{s['mode']:>12} | {s['n_faults_injected']:>8} | "
+          f"{s['n_retries']:>7} | {s['n_quarantined']:>11} | "
+          f"{s['plan_ms_clean']:>6.0f} -> {s['plan_ms_storm']:>6.0f} ms "
+          f"({s['storm_overhead_x']:.2f}x)")
+    r = rows[1]
+    print(f"{r['mode']:>12} | rollback tick {r['rollback_tick_ms']:.1f} ms "
+          f"vs median {r['median_tick_ms']:.1f} ms | "
+          f"{r['requests']} requests, 0 dropped")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"section": "faults",
+                       "backend": jax.default_backend(), "rows": rows}, fh,
+                      indent=2)
+        print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

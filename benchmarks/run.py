@@ -9,6 +9,8 @@
   verification  serial vs pipelined pattern verification (core/executor.py)
   replanning    online replanning: hot-swap pause, pre/post-swap throughput,
                 warm re-open measurement budget (serving/replan.py)
+  faults        fault tolerance: retry/quarantine cost under an injected
+                fault storm + mid-serve rollback tick pause (core/faults.py)
   kernels       kernel ref-vs-offload micro-bench + v5e roofline projection
   roofline      per-(arch x shape x mesh) roofline from the dry-run JSONL
 
@@ -30,7 +32,7 @@ def main() -> None:
     ap.add_argument("--section", default="all",
                     choices=["all", "fig4", "conditions", "extraction",
                              "strategies", "autotune", "verification",
-                             "replanning", "kernels", "roofline"])
+                             "replanning", "faults", "kernels", "roofline"])
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<section>.json next to the cwd for the "
                          "sections that support it")
@@ -80,6 +82,12 @@ def main() -> None:
         from benchmarks import replanning
         replanning.main(
             json_path="BENCH_replanning.json" if args.json else None)
+        print()
+    if args.section in ("all", "faults"):
+        print("== fault tolerance (fault-storm retries + rollback pause) ==")
+        from benchmarks import faults
+        faults.main(
+            json_path="BENCH_faults.json" if args.json else None)
         print()
     if args.section in ("all", "fig4"):
         print("== paper Fig. 4 (automatic offload speedup) ==")

@@ -45,6 +45,7 @@ SECTION_KEYS = {
     "extraction": ("app",),
     "autotune": ("app", "mode"),
     "replanning": ("app", "mode"),
+    "faults": ("app", "mode"),
 }
 # metric -> direction: +1 higher is better, -1 lower is better, 0 report-only
 METRICS = {
@@ -78,6 +79,17 @@ METRICS = {
     "n_measured_warm": 0,
     "n_reused_warm": 0,
     "plan_ms_warm": 0,
+    # faults section: fault-injection accounting and rollback pause,
+    # recorded for the trajectory but never gating (retry counts depend on
+    # the injected storm, tick timings on shared CPU runners are noisy;
+    # the hard gates live in the benchmark itself)
+    "n_faults_injected": 0,
+    "n_retries": 0,
+    "n_quarantined": 0,
+    "plan_ms_storm": 0,
+    "storm_overhead_x": 0,
+    "rollbacks": 0,
+    "rollback_tick_ms": 0,
 }
 DEFAULT_WINDOW = 5
 

@@ -43,10 +43,77 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core import search  # module ref: monkeypatched fns stay honored
+
+
+@dataclass(frozen=True)
+class FaultPolicy:
+    """Fault-tolerance policy for pattern verification.
+
+    The default policy is what a *well-behaved* verification environment
+    needs: no watchdogs (timeouts cost a thread per rep), bounded retry for
+    transient failures, finite-output checking, and MAD outlier rejection
+    over the timed reps.  Hostile environments (real FPGAs, shared GPUs,
+    fault-injection tests) turn the timeouts on via
+    :class:`~repro.core.planner.PlannerConfig`.
+
+    * ``compile_timeout_s`` — wall ceiling per AOT compile (0 = off).
+      Expiry is a transient ``CompileTimeout``; the hung compile's worker
+      is abandoned, its cache entry invalidated, and the bounded retry
+      recompiles fresh.
+    * ``run_timeout_s`` — wall ceiling per execution, first run and every
+      timed rep (0 = off); expiry is a transient ``RunTimeout``.
+    * ``max_retries`` / ``retry_backoff_s`` — bounded retry for failures
+      :func:`~repro.core.search.classify_failure` calls transient, with
+      exponential backoff (``backoff * 2**attempt``, capped at 2 s).
+      Permanent failures never retry — they strike the quarantine instead.
+    * ``check_finite`` — a NaN/Inf-producing pattern fails permanently
+      (``NonFiniteOutput``) instead of winning on garbage speed.
+    * ``outlier_mad`` / ``remeasure`` — modified-z-score rejection over the
+      timed reps with bounded re-measurement (see ``time_callable``).
+    """
+    compile_timeout_s: float = 0.0
+    run_timeout_s: float = 0.0
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    check_finite: bool = True
+    outlier_mad: float = 3.5
+    remeasure: int = 2
+
+
+def measure_with_retry(measure_once: Callable[[], tuple],
+                       policy: FaultPolicy) -> search.Measurement:
+    """Bounded-retry driver around a measurement thunk.
+
+    ``measure_once()`` performs ONE attempt and returns ``(measurement,
+    fresh_compile)`` — the flag says whether that attempt paid for its own
+    compile (True for inline compiles; False when a shared precompiled
+    artifact was reused, whose cost the final attempt reports once).
+    Transient failures retry with exponential backoff up to
+    ``policy.max_retries``; the returned measurement's ``attempts`` counts
+    every try, and the compile seconds burned by failed fresh attempts are
+    folded into ``compile_seconds`` / ``compile_wall_s`` — retries are
+    billed honestly, never hidden."""
+    attempts = 0
+    extra_compile = 0.0
+    while True:
+        attempts += 1
+        m, fresh_compile = measure_once()
+        m.attempts = attempts
+        if (m.ok or attempts > policy.max_retries
+                or m.failure_kind != "transient"):
+            m.compile_seconds += extra_compile
+            m.compile_wall_s += extra_compile
+            return m
+        if fresh_compile or m.failure_phase == "compile":
+            extra_compile += m.compile_seconds
+        if policy.retry_backoff_s > 0:
+            time.sleep(min(policy.retry_backoff_s * (2 ** (attempts - 1)),
+                           2.0))
 
 
 def compile_key(program: str, impl, args) -> tuple:
@@ -138,6 +205,13 @@ class CompileCache:
         with self._lock:
             return key in self._futures
 
+    def invalidate(self, key: tuple) -> None:
+        """Drop one entry (a timed-out or failed compile the retry loop
+        wants to redo fresh).  The abandoned future keeps running on its
+        worker — the cache just stops serving it."""
+        with self._lock:
+            self._futures.pop(key, None)
+
     def prune(self) -> None:
         """Drop entries that cannot be served again: cancelled or still
         pending futures (an executor being shut down) and failed compiles
@@ -195,13 +269,21 @@ class VerificationExecutor:
         A :class:`CompileCache` to dedupe compiles against.  The planner
         passes its ``AutoOffloader``-lifetime cache so re-planning the same
         program (the cache-primed re-plan path) never recompiles a pattern.
+    policy:
+        A :class:`FaultPolicy` governing timeouts, bounded retry, finite
+        checking, and outlier rejection for every job this executor
+        measures.  The default policy retries transients and checks
+        finiteness but sets no timeouts.
     """
 
     def __init__(self, workers: int = 1,
-                 cache: Optional[CompileCache] = None):
+                 cache: Optional[CompileCache] = None,
+                 policy: Optional[FaultPolicy] = None):
         self.workers = max(1, int(workers))
         self.cache = cache if cache is not None else CompileCache()
+        self.policy = policy if policy is not None else FaultPolicy()
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._abandoned = False    # a compile timed out: its worker may hang
         self._lock = threading.Lock()
         self._fresh_keys: set = set()   # compiled by THIS executor's run
         # the shared cache outlives this executor (AutoOffloader lifetime);
@@ -254,6 +336,33 @@ class VerificationExecutor:
                 with self._lock:
                     self.stats.prefetched += 1
 
+    def _measure_job(self, job: VerifyJob, *, warmup: int, reps: int,
+                     precompiled: Optional[search.CompiledArtifact] = None,
+                     ) -> search.Measurement:
+        """One job through the fault policy: the timeout/finite/outlier
+        knobs forwarded to ``time_callable`` and transient failures retried
+        with backoff.  A compile-phase failure (timeout or error) drops the
+        job's CompileCache entry so the retry compiles fresh inline."""
+        p = self.policy
+        state = {"art": precompiled}
+
+        def once():
+            art = state["art"]
+            m = search.time_callable(
+                job.fn, job.args, warmup=warmup, reps=reps,
+                pattern=job.pattern, impl=job.impl, precompiled=art,
+                compile_timeout_s=p.compile_timeout_s,
+                run_timeout_s=p.run_timeout_s,
+                check_finite=p.check_finite,
+                outlier_mad=p.outlier_mad, remeasure=p.remeasure)
+            if (not m.ok and m.failure_kind == "transient"
+                    and m.failure_phase == "compile"):
+                self.cache.invalidate(job.key)
+                state["art"] = None
+            return m, art is None
+
+        return measure_with_retry(once, p)
+
     def measure_batch(self, jobs: list[VerifyJob], *, warmup: int = 1,
                       reps: int = 5) -> list[search.Measurement]:
         """Verify a batch: compile all jobs concurrently (pipelined mode),
@@ -263,9 +372,7 @@ class VerificationExecutor:
         out: list[search.Measurement] = []
         if not self.pipelined:
             for job in jobs:
-                m = search.time_callable(job.fn, job.args, warmup=warmup,
-                                         reps=reps, pattern=job.pattern,
-                                         impl=job.impl)
+                m = self._measure_job(job, warmup=warmup, reps=reps)
                 with self._lock:
                     self.stats.compile_wall_s += m.compile_seconds
                     self.stats.compile_seconds_total += m.compile_seconds
@@ -275,21 +382,42 @@ class VerificationExecutor:
             # at once, and all of them finished before any timed rep runs.
             # Waiting in submission order apportions the blocked wall over
             # the jobs; the sum is ~max(compile) when the pool overlaps.
+            # With a compile timeout, no single wait may exceed it: an
+            # expired future becomes a transient CompileTimeout artifact
+            # (the retry loop in phase 2 recompiles it fresh) and the hung
+            # worker is flagged so shutdown doesn't join it forever.
+            ceiling = (self.policy.compile_timeout_s
+                       if self.policy.compile_timeout_s > 0 else None)
             futures = [self._compile_async(job)[0] for job in jobs]
             arts, waits = [], []
-            for fut in futures:
+            for job, fut in zip(jobs, futures):
                 t0 = time.perf_counter()
-                arts.append(fut.result())
+                try:
+                    arts.append(fut.result(ceiling))
+                except FutureTimeout:
+                    with self._lock:
+                        self._abandoned = True
+                    self.cache.invalidate(job.key)
+                    arts.append(search.CompiledArtifact(
+                        None, time.perf_counter() - t0,
+                        f"CompileTimeout: exceeded {ceiling:.3f}s wall"))
+                except Exception as e:  # noqa: BLE001 — classified downstream
+                    arts.append(search.CompiledArtifact(
+                        None, time.perf_counter() - t0,
+                        f"{type(e).__name__}: {e}"))
                 waits.append(time.perf_counter() - t0)
             # phase 2 — strictly serial timing: nothing else is compiling
             # or running, so run_seconds medians match the serial pipeline
             for job, art, wait_s in zip(jobs, arts, waits):
-                m = search.time_callable(job.fn, job.args, warmup=warmup,
-                                         reps=reps, pattern=job.pattern,
-                                         impl=job.impl, precompiled=art)
-                m.compile_wall_s = wait_s
+                m = self._measure_job(job, warmup=warmup, reps=reps,
+                                      precompiled=art)
+                # the barrier wait is the pipeline-blocked wall; retries add
+                # their fresh-compile cost on top (billed by _measure_job)
+                m.compile_wall_s = wait_s + (
+                    m.compile_wall_s - art.compile_seconds
+                    if m.attempts > 1 else 0.0)
                 with self._lock:
-                    self.stats.compile_wall_s += wait_s
+                    self.stats.compile_wall_s += m.compile_wall_s
                     # count the artifact's true compile duration only when
                     # THIS run compiled it — a warm CompileCache hit from a
                     # previous plan did no compilation now
@@ -319,9 +447,13 @@ class VerificationExecutor:
 
     def shutdown(self) -> None:
         """Stop the pool (cancelling queued speculative compiles) and prune
-        the cache so unfinished/failed entries are never served later."""
+        the cache so unfinished/failed entries are never served later.  An
+        executor that witnessed a compile timeout does NOT wait for its
+        workers — one of them may be wedged, and joining it would turn a
+        survived hang back into a stall."""
         if self._pool is not None:
-            self._pool.shutdown(wait=True, cancel_futures=True)
+            self._pool.shutdown(wait=not self._abandoned,
+                                cancel_futures=True)
             self._pool = None
         self.cache.prune()
         with self._lock:

@@ -1328,7 +1328,7 @@ def _ensure_registry() -> None:
                 "repro.apps.tdfir"):
         try:
             importlib.import_module(mod)
-        except Exception:                 # pragma: no cover - optional deps
+        except ImportError:               # pragma: no cover - optional deps
             pass
 
 

@@ -1,0 +1,216 @@
+"""Deterministic fault injection for the compile/measure/dispatch seams.
+
+The paper's Step-4 verification measures candidate patterns on real
+hardware, and real verification environments are hostile: OpenCL/HDL
+compiles hang, kernels crash, accelerators return garbage, and timings are
+noisy.  The follow-up papers multiply the exposure — arXiv 2004.08548's GA
+verifies whole populations per generation and arXiv 2011.12431 measures
+across mixed GPU/FPGA destinations.  The fault-tolerance layer
+(``search.watchdog_call`` / ``classify_failure`` / ``Quarantine``,
+``executor.FaultPolicy``, the ServeEngine runtime guard) exists for those
+environments; this module is how tests and benchmarks exercise it without
+owning broken hardware.
+
+:class:`FaultInjector` holds a list of :class:`FaultSpec` rules and fires
+them **deterministically**: a spec matches a (site, pattern-key) call, keeps
+a per-key fire counter, and stops firing after ``times`` hits — so a
+``flaky`` spec fails a pattern exactly N times and then lets it succeed,
+which is what bounded retry must survive.  There is no wall-clock or RNG in
+the firing decision; two runs over the same proposal sequence inject the
+same faults.
+
+:func:`wrap_program` returns a program whose built callables consult the
+injector at both seams:
+
+* ``site="compile"`` faults fire while the callable's Python body traces
+  (the ``jit -> lower`` step): a ``hang`` sleeps inside lowering, an
+  ``exception`` raises out of it — exactly where a real HDL compile stalls
+  or dies.
+* ``site="run"`` faults ride a ``jax.pure_callback`` attached to the first
+  floating-point output, so they fire on *every execution* of the compiled
+  artifact: ``hang``/``slow`` sleep on the host during the run, ``nan``
+  replaces the output with NaNs (caught by the finite check), and
+  ``exception``/``flaky`` raise from the callback (surfacing as a runtime
+  error on that execution only).
+
+Injected errors carry a ``transient`` or ``permanent`` marker in their
+message; :func:`repro.core.search.classify_failure` keys off it, mirroring
+how real failures are classified by exception family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+KINDS = ("hang", "exception", "nan", "slow", "flaky")
+SITES = ("compile", "run")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``exception``/``flaky`` specs.  The message embeds the
+    kind and a ``transient``/``permanent`` marker so string-level
+    classification (all measurement errors travel as strings) still sees
+    the intent: ``InjectedFault[flaky/transient] at run for mlp=pallas``."""
+
+    def __init__(self, kind: str, site: str, key: str, transient: bool):
+        self.kind = kind
+        self.site = site
+        self.key = key
+        self.transient = transient
+        marker = "transient" if transient else "permanent"
+        super().__init__(
+            f"InjectedFault[{kind}/{marker}] at {site} for {key or 'any'}")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One injection rule.
+
+    kind:      ``hang`` / ``exception`` / ``nan`` / ``slow`` / ``flaky``.
+    site:      ``compile`` (fires during jit tracing) or ``run`` (fires on
+               every execution via a host callback).
+    match:     substring of the pattern key (``Impl.describe()`` rendering);
+               ``""`` matches every call at the site.
+    times:     per-key fire budget; after ``times`` fires on a key the spec
+               goes quiet for that key (``flaky`` = fail-then-succeed).
+               ``times <= 0`` fires forever.
+    delay_s:   sleep for ``hang``/``slow`` (keep short in tests — a hung
+               worker thread is abandoned, not killed, and non-daemon pool
+               threads are joined at interpreter exit).
+    transient: classification marker carried in the injected error message;
+               ``flaky`` is always transient by definition.
+    """
+    kind: str
+    site: str = "run"
+    match: str = ""
+    times: int = 1
+    delay_s: float = 0.25
+    transient: bool = True
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; one of {SITES}")
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic, seeded firing engine over a list of specs.
+
+    ``seed`` exists so two injectors configured identically are
+    interchangeable in golden tests; firing itself is counter-based (first
+    matching spec with budget left), never random.  Thread-safe: the
+    executor compiles concurrently and specs keep exact per-key counters
+    under a lock.
+    """
+    specs: tuple = ()
+    seed: int = 0
+    log: list = field(default_factory=list)   # (site, key, kind) fire log
+    _fired: dict = field(default_factory=dict)  # (spec idx, key) -> count
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def __post_init__(self):
+        self.specs = tuple(self.specs)
+
+    def _take(self, site: str, key: str) -> Optional[FaultSpec]:
+        """Consume one fire from the first matching spec with budget left
+        for ``key`` (None = no fault at this call)."""
+        with self._lock:
+            for i, s in enumerate(self.specs):
+                if s.site != site or (s.match and s.match not in key):
+                    continue
+                n = self._fired.get((i, key), 0)
+                if s.times > 0 and n >= s.times:
+                    continue
+                self._fired[(i, key)] = n + 1
+                self.log.append((site, key, s.kind))
+                return s
+        return None
+
+    def fire(self, site: str, key: str) -> Optional[FaultSpec]:
+        """Enact a host-side fault at (site, key): ``hang``/``slow`` sleep,
+        ``exception``/``flaky`` raise :class:`InjectedFault`.  ``nan`` is
+        returned to the caller (host code corrupts the output itself).
+        Returns the consumed spec (or None) for the non-raising kinds."""
+        s = self._take(site, key)
+        if s is None:
+            return None
+        if s.kind in ("hang", "slow"):
+            time.sleep(s.delay_s)
+            return s
+        if s.kind in ("exception", "flaky"):
+            raise InjectedFault(s.kind, site, key,
+                                transient=s.transient or s.kind == "flaky")
+        return s    # "nan": the caller replaces its output
+
+    def fired(self, kind: Optional[str] = None) -> int:
+        """Total fires so far (optionally of one kind)."""
+        with self._lock:
+            return sum(1 for _, _, k in self.log if kind is None or k == kind)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._fired.clear()
+            self.log.clear()
+
+
+def _inject_run_faults(out, key: str, injector: FaultInjector):
+    """Attach the run-site seam to a traced output tree: the first
+    floating-point leaf flows through a ``jax.pure_callback`` that consults
+    the injector on every execution — sleeping (hang/slow), raising
+    (exception/flaky), or replacing the leaf with NaNs (nan)."""
+    leaves, treedef = jax.tree.flatten(out)
+    idx = None
+    for i, leaf in enumerate(leaves):
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is not None and np.issubdtype(np.dtype(dtype), np.inexact):
+            idx = i
+            break
+    if idx is None:
+        return out
+    leaf = leaves[idx]
+
+    def _cb(x):
+        spec = injector.fire("run", key)    # may sleep or raise
+        if spec is not None and spec.kind == "nan":
+            return np.full(np.shape(x), np.nan, dtype=np.asarray(x).dtype)
+        return np.asarray(x)
+
+    leaves[idx] = jax.pure_callback(
+        _cb, jax.ShapeDtypeStruct(leaf.shape, leaf.dtype), leaf)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def wrap_program(program, injector: FaultInjector):
+    """A copy of ``program`` whose built callables consult ``injector``.
+
+    Compile-site faults fire during tracing (the callable's Python body
+    executes at ``jit -> lower`` time, inside the compile watchdog's
+    scope); run-site faults fire on every execution of the compiled
+    artifact via a host callback.  The pattern key handed to the injector
+    is the build ``Impl``'s :meth:`~repro.core.regions.Impl.describe`
+    rendering (``"all-ref"`` for the empty pattern), so specs can target
+    one candidate by substring match.
+    """
+    from repro.core.regions import Impl
+
+    inner_build = program.build
+
+    def build(impl):
+        key = Impl(dict(impl)).describe()
+        fn = inner_build(impl)
+
+        def faulty(*args):
+            injector.fire("compile", key)
+            return _inject_run_faults(fn(*args), key, injector)
+
+        return faulty
+
+    return dataclasses.replace(program, build=build)

@@ -46,6 +46,10 @@ File format (version 1)::
               "error": ""
             }
           ],
+          "quarantine": [                # cumulative gene strike records
+            {"gene": "fir_bank=pallas", "strikes": 2,
+             "last_error": "NonFiniteOutput: ..."}
+          ],
           "created_at": "2026-07-29T12:00:00+00:00"
         }
       }
@@ -103,9 +107,16 @@ def plan_cache_key(program, config, backend: Optional[str] = None) -> str:
     """
     # measurement-repetition knobs (reps/warmup) don't change the search
     # space, only timing noise — keying on them would make callers with
-    # different reps miss each other's plans for no reason
+    # different reps miss each other's plans for no reason.  The fault-
+    # tolerance knobs are excluded for the same reason: timeouts, retry
+    # budgets, outlier rejection and quarantine thresholds govern how the
+    # environment's failures are survived, never which pattern is best —
+    # and their exclusion keeps every pre-fault-tolerance key bit-stable.
+    _non_key = ("reps", "warmup", "compile_timeout_s", "run_timeout_s",
+                "max_retries", "retry_backoff_s", "outlier_mad",
+                "remeasure", "quarantine_threshold")
     cfg_fields = {k: v for k, v in dataclasses.asdict(config).items()
-                  if k not in ("reps", "warmup")}
+                  if k not in _non_key}
     # likewise the RNG seed and GA knobs cannot influence a staged or
     # exhaustive trajectory: keying a staged plan on ga_mutation would force
     # a full re-measure for a knob the strategy never reads.  genetic,
@@ -272,6 +283,44 @@ class PlanCache:
                 if key:
                     by_pattern[key] = dict(m)
         return list(by_pattern.values())
+
+    def quarantine_for(self, measurement_key: str) -> list[dict]:
+        """Merged gene-quarantine strike records from every entry taken
+        under the same measurement conditions (see
+        ``search.Quarantine.to_records``).  Each persisted record is a
+        cumulative snapshot, so the max strike count per gene wins; the
+        newest matching entry donates the error string.  A re-opened
+        search loads these and skips known-bad variants outright."""
+        if not measurement_key:
+            return []
+        merged: dict[str, dict] = {}
+        entries = sorted(
+            (e for e in self._data["entries"].values() if isinstance(e, dict)),
+            key=lambda e: str(e.get("created_at", "")))
+        for entry in entries:
+            if entry.get("measurement_key") != measurement_key:
+                continue
+            records = entry.get("quarantine", ())
+            if not isinstance(records, (list, tuple)):
+                continue                          # corrupt field: skip entry
+            for rec in records:
+                if not isinstance(rec, dict):
+                    continue
+                gene = rec.get("gene")
+                try:
+                    strikes = int(rec.get("strikes", 0))
+                except (TypeError, ValueError):
+                    continue
+                if not isinstance(gene, str) or strikes <= 0:
+                    continue
+                prev = merged.get(gene)
+                merged[gene] = {
+                    "gene": gene,
+                    "strikes": max(strikes,
+                                   prev["strikes"] if prev else 0),
+                    "last_error": str(rec.get("last_error", "")),
+                }
+        return [merged[g] for g in sorted(merged)]
 
     def cost_model_for(self, measurement_key: str) -> dict:
         """The newest persisted ``CostModel.export_state`` snapshot taken

@@ -47,8 +47,9 @@ import jax
 
 from repro.core import search
 from repro.core.cost_model import CostModel
-from repro.core.executor import (CompileCache, VerificationExecutor,
-                                 VerifyJob, compile_key)
+from repro.core.executor import (CompileCache, FaultPolicy,
+                                 VerificationExecutor, VerifyJob,
+                                 compile_key, measure_with_retry)
 from repro.core.intensity import RegionAnalysis, analyze_region, count_loops
 from repro.core.plan_cache import (PlanCache, measurement_cache_key,
                                    plan_cache_key, resolve_cache)
@@ -93,6 +94,30 @@ class PlannerConfig:
 
     * ``warmup`` (int, 1) / ``reps`` (int, 5) — per-pattern timing runs;
       ``run_seconds`` is the median of ``reps``.
+
+    Fault tolerance (also NOT in the cache key — they govern how the
+    environment's failures are survived, never which pattern is best; see
+    docs/fault-tolerance.md):
+
+    * ``compile_timeout_s`` (float, 0.0) — wall ceiling per AOT compile
+      under a watchdog; 0 disables.  Expiry is a transient
+      ``CompileTimeout`` that gets a bounded retry.
+    * ``run_timeout_s`` (float, 0.0) — wall ceiling per execution (first
+      run, warmup, every timed rep); 0 disables.
+    * ``max_retries`` (int, 2) / ``retry_backoff_s`` (float, 0.05) —
+      bounded retry with exponential backoff for *transient* failures
+      (timeouts, resource exhaustion, flaky devices).  Permanent failures
+      (lowering errors, NaN/Inf output) never retry.
+    * ``outlier_mad`` (float, 3.5) / ``remeasure`` (int, 2) — MAD-based
+      outlier rejection over the timed reps: reps whose modified z-score
+      exceeds the threshold are dropped, up to ``remeasure`` replacement
+      reps run, and ``run_seconds`` is the median of the kept reps.
+      ``outlier_mad=0`` disables.
+    * ``quarantine_threshold`` (int, 2) — permanent failures strike the
+      failed pattern's (region, variant[, tile]) genes; a gene with this
+      many strikes is quarantined (strategies stop proposing it) and the
+      strikes persist in the plan cache under ``measurement_key`` so
+      future runs skip known-bad variants outright.
 
     Step-4 search strategy (core/strategies.py):
 
@@ -141,6 +166,14 @@ class PlannerConfig:
 
     warmup: int = 1
     reps: int = 5
+    # ---- fault tolerance (core/executor.py FaultPolicy; not in the key) ----
+    compile_timeout_s: float = 0.0   # per-compile watchdog wall (0 = off)
+    run_timeout_s: float = 0.0       # per-execution watchdog wall (0 = off)
+    max_retries: int = 2             # bounded retries for transient failures
+    retry_backoff_s: float = 0.05    # exponential-backoff base between tries
+    outlier_mad: float = 3.5         # modified-z rep rejection (0 = off)
+    remeasure: int = 2               # replacement reps after rejection
+    quarantine_threshold: int = 2    # permanent-failure strikes per gene
     # ---- Step-4 search strategy (core/strategies.py) ----
     strategy: str = "staged"    # staged | genetic | surrogate | exhaustive | auto
     seed: int = 0               # strategy RNG seed (GA determinism)
@@ -261,6 +294,11 @@ class PlanReport:
     # persisted next to the measurements so re-opened searches start from
     # calibrated deltas instead of the roofline seeds
     cost_model_state: dict = field(default_factory=dict)
+    # fault-tolerance provenance: gene ids currently quarantined (filtered
+    # from this search), and the full strike records persisted under
+    # measurement_key so future runs skip known-bad variants
+    quarantined: list[str] = field(default_factory=list)
+    quarantine_records: list[dict] = field(default_factory=list)
 
     def best_impl(self) -> Impl:
         """The selected pattern as a dispatchable Impl."""
@@ -290,7 +328,11 @@ class PlanReport:
         for m in self.measurements:
             lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
                          f"  (compile {m.compile_seconds*1e3:.0f} ms)"
-                         + ("" if m.ok else f"  FAILED {m.error}"))
+                         + (f"  [{m.attempts} attempts]" if m.attempts > 1 else "")
+                         + ("" if m.ok else f"  FAILED [{m.failure_kind or '?'}]"
+                            f" {m.error}"))
+        if self.quarantined:
+            lines.append("quarantined genes: " + ", ".join(self.quarantined))
         for m in self.reused:
             lines.append(f"  pattern[{m.pattern}]: {m.run_seconds*1e3:.2f} ms"
                          f"  [reused from plan cache, zero budget]")
@@ -327,13 +369,21 @@ class PlanReport:
 
 
 class AutoOffloader:
-    def __init__(self, config: PlannerConfig = PlannerConfig()):
+    def __init__(self, config: PlannerConfig = PlannerConfig(),
+                 quarantine: "search.Quarantine | None" = None):
         self.config = config
         # offloader-lifetime compile memo: a pattern compiled once for a
         # (program, shapes) pair is never compiled again by this instance —
         # the cache-primed re-plan path (changed budget/strategy/variant
         # registry) re-verifies through warm executables
         self.compile_cache = CompileCache()
+        # offloader-lifetime strike list.  An external instance may be
+        # shared with a serving-side Replanner so a plan that faulted
+        # mid-serve is filtered from every subsequent search; per-plan-run
+        # records persisted in the cache merge into it on each plan().
+        self.quarantine = (quarantine if quarantine is not None
+                           else search.Quarantine(
+                               threshold=config.quarantine_threshold))
 
     # ------------------------------------------------------------------
     def plan(self, program: OffloadableProgram,
@@ -426,8 +476,22 @@ class AutoOffloader:
         # verification executor — with verify_workers > 1 the per-pair
         # ``precompile`` calls run concurrently (order-preserving, so the
         # ranking below is identical at any worker count)
+        policy = FaultPolicy(compile_timeout_s=cfg.compile_timeout_s,
+                             run_timeout_s=cfg.run_timeout_s,
+                             max_retries=cfg.max_retries,
+                             retry_backoff_s=cfg.retry_backoff_s,
+                             outlier_mad=cfg.outlier_mad,
+                             remeasure=cfg.remeasure)
         executor = VerificationExecutor(workers=cfg.verify_workers,
-                                        cache=self.compile_cache)
+                                        cache=self.compile_cache,
+                                        policy=policy)
+        # known-bad genes: the offloader-lifetime strike list, topped up
+        # with records persisted by previous runs under the same
+        # measurement conditions
+        quarantine = self.quarantine
+        mkey = measurement_cache_key(program) if store is not None else ""
+        if store is not None:
+            quarantine.load_records(store.quarantine_for(mkey))
         try:
             region_map = {r.name: r for r in program.regions}
             pairs: list[VariantCandidate] = []
@@ -448,6 +512,10 @@ class AutoOffloader:
                 pairs.append(VariantCandidate(c.region, var, c.analysis, est))
             eligible = [p for p in pairs if p.resources.lower_ok
                         and p.resources.resource_fraction <= cfg.resource_cap]
+            # quarantined (region, variant) pairs never re-enter the
+            # ranking: their past permanent failures already cost budget
+            eligible = [p for p in eligible
+                        if not quarantine.is_quarantined(p.region, p.variant)]
 
             def rank_key(p: VariantCandidate):
                 # efficiency first; the region's declared deploy/measure
@@ -481,9 +549,19 @@ class AutoOffloader:
                     c.resources = next(iter(c.variant_estimates.values()))
 
             # ---- Step 4: measured pattern search (pluggable strategy) -----
-            report.baseline = search.time_callable(
-                full_ref, sample, warmup=cfg.warmup, reps=cfg.reps,
-                pattern="all-ref", impl=Impl())
+            # the all-ref baseline goes through the same fault policy as
+            # every candidate: watchdogs when configured, bounded retry for
+            # transients — an unlucky hiccup must not void the whole search
+            report.baseline = measure_with_retry(
+                lambda: (search.time_callable(
+                    full_ref, sample, warmup=cfg.warmup, reps=cfg.reps,
+                    pattern="all-ref", impl=Impl(),
+                    compile_timeout_s=policy.compile_timeout_s,
+                    run_timeout_s=policy.run_timeout_s,
+                    check_finite=policy.check_finite,
+                    outlier_mad=policy.outlier_mad,
+                    remeasure=policy.remeasure), True),
+                policy)
 
             def _job(impl) -> VerifyJob:
                 impl = Impl(impl)
@@ -504,13 +582,13 @@ class AutoOffloader:
 
             ledger = MeasurementLedger(measure, budget=cfg.max_measurements,
                                        measure_batch_fn=measure_batch,
-                                       prefetch_fn=prefetch)
+                                       prefetch_fn=prefetch,
+                                       quarantine=quarantine)
             # cross-run reuse: sibling cache entries measured under the same
             # conditions donate their per-pattern measurements — a re-proposed
             # known pattern is served from the ledger and costs zero d
             primed: list[Measurement] = []
             if store is not None:
-                mkey = measurement_cache_key(program)
                 for m in store.measurements_for(mkey):
                     impl = Impl(m.get("impl", {}))
                     pm = Measurement(
@@ -552,7 +630,8 @@ class AutoOffloader:
                         for p in ranked if p.region in eff_regions],
                 resource_cap=cfg.resource_cap,
                 seed=cfg.seed,
-                baseline=report.baseline)
+                baseline=report.baseline,
+                quarantine=quarantine)
             # the roofline surrogate, seeded from the Step-3 estimates and
             # pre-calibrated on everything already measured: the fresh baseline
             # (exact re-base), then the primed cross-run measurements —
@@ -591,6 +670,8 @@ class AutoOffloader:
             executor.shutdown()     # sync final cache stats before reading them
             report.measurements = ledger.order       # budget-consuming, in order
             report.reused = [m for m in ledger.reused() if m.mapping()]
+            report.quarantined = quarantine.blocked()
+            report.quarantine_records = quarantine.to_records()
             report.strategy = strategy.name
             report.search_trace = state.trace
             report.skipped_combinations = state.skipped
@@ -685,6 +766,10 @@ class AutoOffloader:
         return {
             "measurement_key": measurement_cache_key(program),
             "measurements": persisted,
+            # cumulative gene strike records (see search.Quarantine):
+            # sibling searches under the same measurement_key load these and
+            # skip known-bad variants without re-paying their failures
+            "quarantine": list(report.quarantine_records),
             # the calibrated surrogate state, keyed with the measurements it
             # was learned from (see PlanCache.cost_model_for)
             "cost_model": dict(report.cost_model_state),

@@ -204,6 +204,23 @@ def register_variant(region: str, variant: str,
     return deco
 
 
+def unregister_variant(region: str, variant: str) -> bool:
+    """Remove one variant registration (and its TuningSpace).  Bumps the
+    registry version just like registration: a CompileCache keyed on the
+    old registry must never serve its executable after the variant is gone.
+    Primarily for tests/benchmarks that register throwaway variants on real
+    regions and must not pollute later searches; returns whether the
+    variant existed."""
+    table = REGISTRY.get(region)
+    existed = table is not None and table.pop(variant, None) is not None
+    if table is not None and not table:
+        REGISTRY.pop(region, None)
+    _TUNING.pop((region, variant), None)
+    if existed:
+        _REGISTRY_VERSION[0] += 1
+    return existed
+
+
 def tuning_space(region: str, variant: str) -> Optional[TuningSpace]:
     """The TuningSpace a variant declared at registration, or None."""
     return _TUNING.get((region, variant))

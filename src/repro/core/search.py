@@ -45,7 +45,7 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-from repro.core.regions import canonical_gene, gene_variant
+from repro.core.regions import Impl, canonical_gene, gene_variant
 
 
 @dataclass
@@ -66,6 +66,16 @@ class Measurement:
     # compile ran inline; much smaller when a concurrent executor had the
     # executable warm before the timing phase reached this pattern.
     compile_wall_s: float = 0.0
+    # fault-tolerance provenance.  `attempts` counts every try the retry
+    # loop spent on this pattern (1 = first try succeeded); the compile
+    # seconds burned by failed attempts are folded into compile_seconds /
+    # compile_wall_s so retries are billed honestly.  On failure,
+    # `failure_kind` is the classify_failure() verdict and `failure_phase`
+    # says which half died ("compile" or "run").
+    attempts: int = 1
+    failure_kind: str = ""
+    failure_phase: str = ""
+    outliers_rejected: int = 0   # timed reps dropped by MAD rejection
 
     def mapping(self) -> dict:
         """The measured {region -> variant} mapping (empty = all-ref)."""
@@ -133,43 +143,211 @@ def aot_compile(fn, args) -> CompiledArtifact:
     return finish_compile(*aot_lower(fn, args))
 
 
+# ---------------------------------------------------------------------------
+# Fault tolerance: watchdog, failure classification, outlier rejection
+# ---------------------------------------------------------------------------
+# Error-message markers that make a failure *transient* — worth a bounded
+# retry with backoff.  Everything else (lowering/type errors, non-finite
+# outputs, injected permanent faults) is permanent: a retry cannot fix it
+# and repeat offenders are quarantined instead.
+TRANSIENT_MARKERS = (
+    "WatchdogTimeout",
+    "CompileTimeout",
+    "RunTimeout",
+    "/transient",                  # InjectedFault[kind/transient]
+    "RESOURCE_EXHAUSTED",
+    "DEADLINE_EXCEEDED",
+    "UNAVAILABLE",
+    "OutOfMemory",
+)
+
+
+def classify_failure(error: str) -> str:
+    """``"transient"`` or ``"permanent"`` for a measurement error string.
+
+    Transient = the environment failed (timeout, resource exhaustion, a
+    flaky device): retrying the identical measurement may succeed.
+    Permanent = the *pattern* failed (it does not lower, types don't check,
+    it produces NaN/Inf): retrying is wasted budget, so permanent failures
+    strike the pattern's genes in the :class:`Quarantine` instead."""
+    err = str(error or "")
+    if not err:
+        return "permanent"
+    if "/permanent" in err or "NonFiniteOutput" in err:
+        return "permanent"
+    return ("transient" if any(m in err for m in TRANSIENT_MARKERS)
+            else "permanent")
+
+
+def watchdog_call(fn, args=(), *, timeout_s: float):
+    """Run ``fn(*args)`` under a wall-clock watchdog.
+
+    Returns ``(ok, value, error)``.  The work runs on a daemon thread
+    joined with ``timeout_s``; on expiry the thread is *abandoned* (Python
+    cannot kill a thread — a genuinely hung compile keeps its thread until
+    process exit, which is exactly the trade a real verification
+    environment makes when it gives up on a 3-hour HDL compile) and the
+    error is ``WatchdogTimeout`` — classified transient, so the retry loop
+    gets its bounded second chance."""
+    box: dict = {}
+
+    def target():
+        try:
+            box["value"] = fn(*args)
+        except BaseException as e:  # noqa: BLE001 — reported to the caller
+            box["error"] = f"{type(e).__name__}: {e}"
+
+    t = threading.Thread(target=target, daemon=True, name="measure-watchdog")
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive():
+        return False, None, f"WatchdogTimeout: exceeded {timeout_s:.3f}s wall"
+    if "error" in box:
+        return False, None, box["error"]
+    return True, box.get("value"), ""
+
+
+def _mad_reject(runs: list, z: float) -> tuple[list, int]:
+    """Split timed reps into (kept, n_rejected) by modified z-score:
+    ``|x - median| / (1.4826 * MAD) > z`` rejects.  A zero MAD (at least
+    half the reps identical) rejects nothing — the median is already
+    robust there."""
+    med = float(np.median(runs))
+    mad = float(np.median([abs(x - med) for x in runs]))
+    if mad <= 0.0:
+        return list(runs), 0
+    kept = [x for x in runs if abs(x - med) / (1.4826 * mad) <= z]
+    return kept, len(runs) - len(kept)
+
+
+def _nonfinite(tree) -> bool:
+    """True when any inexact leaf of an output tree holds NaN/Inf."""
+    for leaf in jax.tree.leaves(tree):
+        arr = np.asarray(leaf)
+        if (np.issubdtype(arr.dtype, np.inexact)
+                and not np.all(np.isfinite(arr))):
+            return True
+    return False
+
+
+class _RunFailure(RuntimeError):
+    """Internal: a run-phase failure whose message is already formatted
+    (the watchdog path) — the outer handler must not re-prefix it."""
+
+
+def _call_blocked(compiled, args):
+    """One fully-synchronous execution of an AOT executable."""
+    out = compiled(*args)
+    _block(out)
+    return out
+
+
 def time_callable(fn, args, *, warmup: int = 1, reps: int = 5,
                   pattern: str = "", impl: dict | None = None,
-                  precompiled: CompiledArtifact | None = None) -> Measurement:
+                  precompiled: CompiledArtifact | None = None,
+                  compile_timeout_s: float = 0.0,
+                  run_timeout_s: float = 0.0,
+                  check_finite: bool = False,
+                  outlier_mad: float = 0.0,
+                  remeasure: int = 0) -> Measurement:
     """Measure one offload pattern: AOT compile (unless a ``precompiled``
     artifact is handed in), then first run, warmup, and ``reps`` timed
     executions; ``run_seconds`` is the median of the reps.
 
     The compile and run phases are accounted separately on BOTH the success
     and the failure paths: a run-phase failure still reports the (real)
-    ``compile_seconds`` of its successful compile."""
+    ``compile_seconds`` of its successful compile, and every failure is
+    classified (``failure_kind``) and located (``failure_phase``).
+
+    Fault-tolerance knobs (all off by default — the bare call is the exact
+    historical behavior):
+
+    * ``compile_timeout_s > 0`` runs the inline AOT compile under
+      :func:`watchdog_call`; expiry is a transient ``CompileTimeout``.
+    * ``run_timeout_s > 0`` runs *every* execution (first run, warmup, and
+      each timed rep) under the watchdog; expiry is a transient
+      ``RunTimeout``.  The watchdog thread adds microseconds of overhead to
+      each rep — enable it when hangs are a real risk, not for free.
+    * ``check_finite`` fails the measurement (permanent
+      ``NonFiniteOutput``) when the first run produces NaN/Inf — a
+      numerically-broken offload must never win on speed.
+    * ``outlier_mad > 0`` rejects timed reps whose modified z-score exceeds
+      the threshold (real-hardware noise), re-measures up to ``remeasure``
+      replacement reps, and reports the median of the kept reps;
+      ``runs`` keeps every raw rep and ``outliers_rejected`` the count.
+    """
     impl = dict(impl) if impl is not None else None
-    art = precompiled if precompiled is not None else aot_compile(fn, args)
+    if precompiled is not None:
+        art = precompiled
+    elif compile_timeout_s and compile_timeout_s > 0:
+        ok, art, err = watchdog_call(aot_compile, (fn, args),
+                                     timeout_s=compile_timeout_s)
+        if not ok:
+            art = CompiledArtifact(None, compile_timeout_s,
+                                   f"CompileTimeout: {err}")
+    else:
+        art = aot_compile(fn, args)
     if not art.ok:
         return Measurement(pattern, art.compile_seconds, float("inf"), [],
                            False, art.error, impl=impl,
-                           compile_wall_s=art.compile_seconds)
-    try:
-        t0 = time.perf_counter()
-        _block(art.compiled(*args))
-        first_run_s = time.perf_counter() - t0
-        for _ in range(max(warmup - 1, 0)):
-            _block(art.compiled(*args))
-        runs = []
-        for _ in range(reps):
-            t = time.perf_counter()
-            _block(art.compiled(*args))
-            runs.append(time.perf_counter() - t)
-        return Measurement(pattern, art.compile_seconds,
-                           float(np.median(runs)), runs, impl=impl,
-                           first_run_seconds=first_run_s,
-                           compile_wall_s=art.compile_seconds)
-    except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
+                           compile_wall_s=art.compile_seconds,
+                           failure_kind=classify_failure(art.error),
+                           failure_phase="compile")
+
+    def run_once():
+        if run_timeout_s and run_timeout_s > 0:
+            ok, out, err = watchdog_call(_call_blocked, (art.compiled, args),
+                                         timeout_s=run_timeout_s)
+            if not ok:
+                raise _RunFailure(f"RunTimeout: {err}"
+                                  if "WatchdogTimeout" in err else err)
+            return out
+        return _call_blocked(art.compiled, args)
+
+    def run_failed(error: str) -> Measurement:
         # the compile SUCCEEDED and only the run failed: its compile cost is
         # real and must be accounted (previously misreported as 0.0)
         return Measurement(pattern, art.compile_seconds, float("inf"), [],
-                           False, f"{type(e).__name__}: {e}", impl=impl,
-                           compile_wall_s=art.compile_seconds)
+                           False, error, impl=impl,
+                           compile_wall_s=art.compile_seconds,
+                           failure_kind=classify_failure(error),
+                           failure_phase="run")
+
+    try:
+        t0 = time.perf_counter()
+        out = run_once()
+        first_run_s = time.perf_counter() - t0
+        if check_finite and _nonfinite(out):
+            return run_failed("NonFiniteOutput: pattern produced NaN/Inf")
+        for _ in range(max(warmup - 1, 0)):
+            run_once()
+        runs = []
+        for _ in range(reps):
+            t = time.perf_counter()
+            run_once()
+            runs.append(time.perf_counter() - t)
+        rejected = 0
+        kept = runs
+        if outlier_mad and outlier_mad > 0 and len(runs) >= 3:
+            kept, rejected = _mad_reject(runs, outlier_mad)
+            # bounded re-measurement: replace (some of) the rejected reps,
+            # then re-filter the full raw set once — no open-ended loop
+            for _ in range(min(rejected, max(int(remeasure), 0))):
+                t = time.perf_counter()
+                run_once()
+                runs.append(time.perf_counter() - t)
+            if rejected:
+                refiltered, rejected = _mad_reject(runs, outlier_mad)
+                kept = refiltered if refiltered else kept
+        return Measurement(pattern, art.compile_seconds,
+                           float(np.median(kept)), runs, impl=impl,
+                           first_run_seconds=first_run_s,
+                           compile_wall_s=art.compile_seconds,
+                           outliers_rejected=rejected)
+    except _RunFailure as e:
+        return run_failed(str(e))
+    except Exception as e:  # noqa: BLE001 — a pattern failing = not a solution
+        return run_failed(f"{type(e).__name__}: {e}")
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +364,110 @@ def impl_key(impl) -> tuple:
     return tuple(sorted((r, canonical_gene(r, v))
                         for r, v in dict(impl).items()
                         if gene_variant(v) != "ref"))
+
+
+class Quarantine:
+    """Strike list for (region, variant[, tile]) genes that fail repeatedly.
+
+    Gene identity is the canonical single-gene rendering
+    (``Impl({region: gene}).describe()``), so a defaulted-tile gene and the
+    bare variant share one record while distinct tile points are tracked
+    separately — the same canonicalization the ledger key uses.
+
+    ``record`` strikes every non-ref gene of a failed measurement (a failed
+    multi-gene pattern can't name its culprit, so all its genes are
+    suspects; a gene that also appears in succeeding patterns simply never
+    accumulates enough strikes).  A gene reaching ``threshold`` strikes is
+    quarantined: the planner filters it from the Step-3 ranking, strategies
+    stop proposing it (:meth:`SearchState.gene_allowed`), and the
+    replanner never re-offers a plan containing it.  Records round-trip
+    through :class:`~repro.core.plan_cache.PlanCache` entries under
+    ``measurement_key`` so future runs skip known-bad genes without
+    re-paying their failures.  Transient failures are retried to success
+    by the executor and never reach ``record`` — only permanent,
+    retry-exhausted failures strike.
+    """
+
+    def __init__(self, threshold: int = 2):
+        self.threshold = max(1, int(threshold))
+        self._lock = threading.Lock()
+        self._strikes: dict[str, int] = {}
+        self._errors: dict[str, str] = {}
+
+    @staticmethod
+    def gene_id(region: str, gene) -> str:
+        """Canonical persistent identity of one (region, gene)."""
+        return Impl({region: gene}).describe()
+
+    def record(self, m: Measurement) -> list[str]:
+        """Strike the genes of a failed measurement; returns the gene ids
+        that just crossed the quarantine threshold."""
+        if m.ok:
+            return []
+        return self.record_failure(m.mapping(), m.error)
+
+    def record_failure(self, impl, error: str) -> list[str]:
+        """Strike every non-ref gene of ``impl`` directly (the serving-side
+        feedback path, where no Measurement exists — e.g. a plan that
+        faulted mid-serve)."""
+        newly: list[str] = []
+        with self._lock:
+            for region, gene in sorted(dict(impl).items()):
+                if gene_variant(gene) == "ref":
+                    continue
+                gid = self.gene_id(region, gene)
+                n = self._strikes.get(gid, 0) + 1
+                self._strikes[gid] = n
+                self._errors[gid] = str(error)
+                if n == self.threshold:
+                    newly.append(gid)
+        return newly
+
+    def is_quarantined(self, region: str, gene) -> bool:
+        gid = self.gene_id(region, gene)
+        with self._lock:
+            return self._strikes.get(gid, 0) >= self.threshold
+
+    def allows(self, impl) -> bool:
+        """True when no gene of the pattern is quarantined."""
+        return not any(self.is_quarantined(r, g)
+                       for r, g in dict(impl).items()
+                       if gene_variant(g) != "ref")
+
+    def blocked(self) -> list[str]:
+        """Gene ids currently at/over the threshold, sorted."""
+        with self._lock:
+            return sorted(g for g, n in self._strikes.items()
+                          if n >= self.threshold)
+
+    def strikes(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._strikes)
+
+    def to_records(self) -> list[dict]:
+        """JSON-serializable strike records (persisted in cache entries)."""
+        with self._lock:
+            return [{"gene": g, "strikes": n,
+                     "last_error": self._errors.get(g, "")}
+                    for g, n in sorted(self._strikes.items())]
+
+    def load_records(self, records) -> None:
+        """Merge persisted records; the max strike count per gene wins
+        (each persisted record is already a cumulative snapshot)."""
+        for rec in records or ():
+            if not isinstance(rec, dict):
+                continue
+            gene = rec.get("gene")
+            try:
+                n = int(rec.get("strikes", 0))
+            except (TypeError, ValueError):
+                continue
+            if not isinstance(gene, str) or n <= 0:
+                continue
+            with self._lock:
+                if n > self._strikes.get(gene, 0):
+                    self._strikes[gene] = n
+                    self._errors[gene] = str(rec.get("last_error", ""))
 
 
 @dataclass
@@ -231,6 +513,9 @@ class MeasurementLedger:
     budget: int
     measure_batch_fn: Optional[Callable] = None
     prefetch_fn: Optional[Callable] = None
+    # failed (retry-exhausted) measurements strike their genes here, so the
+    # strategies' quarantine filter sees new offenders mid-run
+    quarantine: Optional[Quarantine] = None
     hits: int = 0
     misses: int = 0
     order: list[Measurement] = field(default_factory=list)
@@ -261,6 +546,13 @@ class MeasurementLedger:
         re-proposed this run — served for free."""
         return [m for m in self.served
                 if impl_key(m.impl or {}) in self._primed]
+
+    def failures(self) -> list[Measurement]:
+        """Budget-consuming measurements that failed, in measurement order
+        — the run's failure provenance (each carries ``attempts``,
+        ``failure_kind``, ``failure_phase``, and the billed seconds)."""
+        with self._lock:
+            return [m for m in self.order if not m.ok]
 
     def _serve(self, key: tuple, m: Measurement) -> Measurement:
         # callers hold self._lock
@@ -293,9 +585,14 @@ class MeasurementLedger:
             m = self.measure_fn(impl)
         except BaseException:
             # measure_fn must return failure Measurements, never raise; if
-            # it does anyway (a test helper calling pytest.fail), release
-            # any waiters before propagating so nothing deadlocks
+            # it does anyway (a test helper calling pytest.fail, a fault
+            # injector blowing through the executor), release any waiters
+            # AND refund the reserved budget before propagating — no entry
+            # was stored, so a retry of the same pattern would otherwise
+            # bill a second time for a measurement that never happened
             with self._lock:
+                self.budget += 1
+                self.misses -= 1
                 self._inflight.pop(k, None)
             ev.set()
             raise
@@ -305,6 +602,8 @@ class MeasurementLedger:
             self._inflight.pop(k, None)
             res = self._serve(k, m)
         ev.set()
+        if self.quarantine is not None and not m.ok:
+            self.quarantine.record(m)
         return res
 
     def measure_batch(self, impls) -> list[Optional[Measurement]]:
@@ -337,19 +636,38 @@ class MeasurementLedger:
                 else:
                     ms = [self.measure_fn(impl) for impl in batch]
             except BaseException:
+                # refund the whole reservation: nothing was stored, so the
+                # strategy's retry of these patterns must not double-bill
                 with self._lock:
                     for k, _ in to_measure:
+                        self.budget += 1
+                        self.misses -= 1
                         ev = self._inflight.pop(k, None)
                         if ev is not None:
                             ev.set()
                 raise
             with self._lock:
+                stored: set = set()
                 for (k, _), m in zip(to_measure, ms):
                     self._entries[k] = m
                     self.order.append(m)
+                    stored.add(k)
                     ev = self._inflight.pop(k, None)
                     if ev is not None:
                         ev.set()
+                for k, _ in to_measure:
+                    # a short batch_fn return: refund the unmeasured tail so
+                    # its budget isn't leaked and no waiter deadlocks
+                    if k not in stored:
+                        self.budget += 1
+                        self.misses -= 1
+                        ev = self._inflight.pop(k, None)
+                        if ev is not None:
+                            ev.set()
+            if self.quarantine is not None:
+                for m in ms:
+                    if m is not None and not m.ok:
+                        self.quarantine.record(m)
         # patterns another thread is measuring right now: wait so the
         # assembly below can serve their entries instead of dropping them
         for k in set(keys) - measured_keys:

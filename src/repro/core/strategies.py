@@ -121,10 +121,23 @@ class SearchState:
     # Step-3 analysis is available; duck-typed: predict/observe/history.
     # None -> surrogate-mode strategies degrade to their measured behavior.
     cost_model: object | None = None
+    # gene strike list (core/search.py Quarantine), attached by the planner;
+    # duck-typed (is_quarantined).  None — the default, and always the case
+    # for hand-built states — allows every gene, so pre-fault-tolerance
+    # trajectories are bit-identical.
+    quarantine: object | None = None
 
     def variants_of(self, region: str) -> list[SearchCandidate]:
         """The region's eligible destinations, best-ranked first."""
         return [c for c in self.ranked if c.region == region]
+
+    def gene_allowed(self, region: str, gene) -> bool:
+        """Whether strategies may propose this gene (``ref`` always is;
+        quarantined genes — repeat permanent failers — never are)."""
+        if gene_variant(gene) == "ref":
+            return True
+        q = self.quarantine
+        return q is None or not q.is_quarantined(region, gene)
 
     def fractions(self) -> dict[tuple[str, str], float]:
         return {(c.region, c.variant): c.resource_fraction
@@ -151,14 +164,17 @@ def _tile_alleles(state: SearchState, region: str) -> list:
     and — when a variant declared a TuningSpace — every valid non-default
     tile point as a ``(variant, params)`` gene.  Without tuning spaces
     this is exactly the pre-tuning list, so RNG draw sequences (hence the
-    golden GA trajectories) are unchanged."""
+    golden GA trajectories) are unchanged.  Quarantined genes (variants or
+    individual tile points with repeated permanent failures) are filtered
+    out — strategies must never propose them."""
     vals: list = ["ref"]
     for c in state.variants_of(region):
-        vals.append(c.variant)
+        if state.gene_allowed(region, c.variant):
+            vals.append(c.variant)
         if c.tuning is not None:
             for p in c.tuning.points():
                 canon = c.tuning.canonical(p)
-                if canon:
+                if canon and state.gene_allowed(region, (c.variant, canon)):
                     vals.append((c.variant, canon))
     return vals
 
@@ -339,6 +355,8 @@ class StagedSearch(SearchStrategy):
                     canon = space.canonical(p)
                     g = dict(current)
                     g[r] = name if not canon else (name, canon)
+                    if not state.gene_allowed(r, g[r]):
+                        continue          # quarantined tile point
                     impl = Impl(g)
                     key = impl.describe()
                     if key in proposed:
@@ -448,8 +466,13 @@ class GeneticSearch(SearchStrategy):
         def repair(g: dict) -> dict:
             # over-cap genomes repaired toward ref: the heaviest gene is
             # switched off until the genome fits (paper: combinations over
-            # the FPGA resource limit are never built)
+            # the FPGA resource limit are never built).  Quarantined genes
+            # (possible via neighbor-step tile mutation, whose moves don't
+            # come from the filtered allele lists) repair to ref too.
             g = dict(g)
+            for r in regions:
+                if not state.gene_allowed(r, g[r]):
+                    g[r] = "ref"
             while state.impl_fraction(g) > state.resource_cap:
                 on = [r for r in regions if gene_variant(g[r]) != "ref"]
                 if not on:

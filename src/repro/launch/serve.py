@@ -163,11 +163,15 @@ def main() -> None:
     replanner = None
     if replanning:
         from repro.serving.replan import Replanner, ReplanConfig
+        # share the offloader's quarantine: a plan the engine rolled back
+        # (or the canary vetoed) stops being proposed by the very next
+        # background search
         replanner = Replanner(
             make_replan_fn(args.arch, offloader, cache,
                            default_seq=args.prompt_len),
             config=ReplanConfig(every_ticks=args.replan_every,
-                                on_drift=args.replan_on_drift))
+                                on_drift=args.replan_on_drift),
+            quarantine=offloader.quarantine)
         engine.attach_replanner(replanner)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     for r in range(args.requests):
@@ -194,11 +198,18 @@ def main() -> None:
     print(f"prefill compilations: {s['prefill_traces']} "
           f"(buckets {s['buckets']})")
     if replanner is not None:
-        replanner.join(timeout=60.0)
+        replanner.close(timeout=60.0)
         rs = replanner.stats()
         print(f"replanning: {rs['replans']} search(es), "
               f"{rs['offers']} offered, {s['swaps']} swap(s) installed "
               f"(plan generation {s['plan_generation']})")
+        if rs["canary_rejects"] or s["rollbacks"]:
+            print(f"fault tolerance: {rs['canary_rejects']} canary "
+                  f"reject(s), {s['rollbacks']} rollback(s)"
+                  + (f" [degraded: {engine.last_fault}]"
+                     if s["degraded"] else ""))
+        if replanner.last_error is not None:
+            print(f"replanner error: {replanner.last_error}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,15 @@ Admission control: ``submit()`` rejects requests whose prompt + frontend
 prefix + max_new_tokens cannot fit the cache (the overflow used to silently
 corrupt cache rows via the decode-step ``min(pos, ctx-1)`` slot clamp).
 
+Graceful degradation: every tick-path plan call runs under a runtime guard
+(``_plan_call``) — a kernel exception or non-finite logits rolls the engine
+back to the last healthy ``PlanGeneration`` (all-ref as the terminal
+fallback) and retries the same call, so in-flight requests are never dropped
+or corrupted by a bad hot-swap.  ``canary_check`` lets a replanner validate
+a candidate (finite + bit-equal logits on a synthetic batch) before
+``offer_plan``; faulted plan keys are permanently refused re-installation.
+See docs/fault-tolerance.md for the canary → swap → rollback state machine.
+
 This runs the same ``prefill``/``decode_step`` the dry-run lowers, so it is
 the serving layer for any assigned arch (GQA KV caches, rotating local
 windows, SSM/RG-LRU states all behave as cache pytrees here).
@@ -66,6 +75,19 @@ class ServeIncompleteError(RuntimeError):
             f"run_to_completion exhausted max_ticks={max_ticks} with "
             f"{len(pending)} request(s) unfinished (rids {pending}); "
             f"{len(finished)} finished")
+
+
+class PlanFault(RuntimeError):
+    """A serving plan misbehaved on the tick path: a kernel raised, or the
+    plan produced non-finite logits.  The engine catches this internally to
+    roll back to the last healthy generation; it only escapes when even the
+    all-reference plan faults (nothing left to roll back to)."""
+
+
+# rollback targets retained per engine: the newest N previously-healthy
+# generations, newest last (older history adds nothing — all-ref is the
+# terminal fallback anyway)
+_FALLBACK_CAPACITY = 4
 
 
 @dataclass
@@ -230,6 +252,15 @@ class ServeEngine:
         self._warm_cache = None          # template cache for off-thread warms
         self._replanner = None
         self._events: deque[dict] = deque(maxlen=_EVENT_CAPACITY)
+        # ---- fault tolerance (graceful degradation) ----
+        self.rollbacks = 0               # faulted generations rolled back
+        self.degraded = False            # serving a rollback, not the offer
+        self.last_fault: Optional[str] = None
+        self._fallbacks: list[PlanGeneration] = []   # healthy gens, newest last
+        self._faulted_keys: set[tuple] = set()       # plan keys seen faulting
+        # a generation is "healthy" once it has served a full tick without
+        # faulting; only healthy generations become rollback targets
+        self._gen_healthy = True
         self._gen = self._generation_for(impl)
 
     # ------------------------------------------------------------------
@@ -309,11 +340,127 @@ class ServeEngine:
             prepared, self._pending_plan = self._pending_plan, None
         if prepared is None or prepared.key == self._gen.key:
             return
+        if prepared.key in self._faulted_keys:
+            return                       # never re-install a plan that faulted
+        if self._gen_healthy:
+            # keep the outgoing generation as a rollback target — it served
+            # at least one full tick without faulting
+            self._fallbacks = [g for g in self._fallbacks
+                               if g.key != self._gen.key]
+            self._fallbacks.append(self._gen)
+            del self._fallbacks[:-_FALLBACK_CAPACITY]
+        self._gen_healthy = False        # the incoming plan must earn trust
+        self.degraded = False
         self.plan_generation += 1
         prepared.generation = self.plan_generation
         self._gen = prepared
         self.swaps += 1
         self.swap_ticks.append(self.ticks)
+
+    # ------------------------------------------------------------------
+    # fault tolerance: guarded plan calls, rollback, canary validation
+    # ------------------------------------------------------------------
+    def _all_ref_generation(self) -> PlanGeneration:
+        """The terminal fallback: every region pinned to its loop-faithful
+        ``ref`` variant (overriding any architectural offload defaults)."""
+        return self._generation_for(
+            Impl({r: "ref" for r in F.default_impl(self.cfg)}))
+
+    def _plan_call(self, op: str, *args):
+        """Run one plan entry point (``"prefill"`` or ``"decode"``) under the
+        runtime guard.  A kernel exception or non-finite logits triggers a
+        rollback to the last healthy generation and a retry of the same
+        call, so the in-flight request never observes the fault.  Raises
+        only when no rollback target remains (the all-ref plan itself is
+        faulting)."""
+        while True:
+            gen = self._gen
+            try:
+                out = getattr(gen, op)(*args)
+                logits = np.asarray(out[0])
+                if not np.all(np.isfinite(logits)):
+                    raise PlanFault(
+                        f"{op} produced non-finite logits under plan "
+                        f"{gen.impl.describe()!r}")
+                return out
+            except Exception as err:  # noqa: BLE001 — every tick-path plan
+                # failure routes through rollback, whatever its type
+                if not self._rollback(gen, op, err):
+                    raise
+
+    def _rollback(self, failed: PlanGeneration, op: str,
+                  err: Exception) -> bool:
+        """Replace ``failed`` with the newest healthy fallback (all-ref as
+        the terminal target).  Returns False when nothing is left to roll
+        back to — the caller re-raises."""
+        if failed is not self._gen:
+            return True                  # already rolled past it: just retry
+        self._faulted_keys.add(failed.key)
+        target = None
+        while self._fallbacks:
+            cand = self._fallbacks.pop()
+            if cand.key not in self._faulted_keys:
+                target = cand
+                break
+        if target is None:
+            target = self._all_ref_generation()
+            if target.key == failed.key:
+                return False             # the reference plan itself faulted
+        self.plan_generation += 1
+        target.generation = self.plan_generation
+        self._gen = target
+        self._gen_healthy = True         # fallbacks already earned trust
+        self.rollbacks += 1
+        self.degraded = True
+        self.last_fault = f"{op}: {err}"
+        with self._plan_lock:
+            pending = self._pending_plan
+            if pending is not None and pending.key in self._faulted_keys:
+                self._pending_plan = None
+        rp = self._replanner
+        if rp is not None and hasattr(rp, "on_plan_fault"):
+            rp.on_plan_fault(failed.impl, self.last_fault)
+        return True
+
+    def canary_check(self, prepared: PlanGeneration, *,
+                     reference: Optional[PlanGeneration] = None
+                     ) -> tuple[bool, str]:
+        """Validate ``prepared`` on a synthetic batch BEFORE it may serve.
+
+        Runs the candidate's decode step against a throwaway template cache
+        (zero tokens/positions — the same shapes ``_warm`` exercises, so
+        this piggybacks on warmed traces) and checks that it (a) does not
+        raise, (b) produces finite logits, and (c) matches the reference
+        generation's logits bit-for-bit on the same inputs (the serving
+        plan by default) — the engine's correctness contract says patterns
+        are numerics-identical, so any bit difference means a miscompiled
+        or wrong kernel.  Returns ``(ok, reason)``.  Thread-safe off the
+        tick path; touches no serving state."""
+        ref = reference if reference is not None else self._gen
+        if self._warm_cache is None:
+            self._warm_cache = F.init_cache(self.cfg, self.slots, self.ctx)
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        try:
+            logits, _ = prepared.decode(self.params, self._warm_cache,
+                                        toks, pos)
+            cand = np.asarray(logits)
+        except Exception as err:  # noqa: BLE001 — any failure mode rejects
+            return False, f"canary decode raised: {err}"
+        if not np.all(np.isfinite(cand)):
+            return False, "canary decode produced non-finite logits"
+        if ref is not None and prepared.key != ref.key:
+            try:
+                ref_logits, _ = ref.decode(self.params, self._warm_cache,
+                                           toks, pos)
+                ref_arr = np.asarray(ref_logits)
+            except Exception as err:  # noqa: BLE001 — a faulting reference
+                # cannot veto the candidate; the finite check already passed
+                return True, f"reference decode raised ({err}); accepted"
+            if cand.shape != ref_arr.shape or not np.array_equal(cand, ref_arr):
+                return False, ("canary logits differ bitwise from the "
+                               "serving plan")
+        return True, "ok"
 
     @property
     def plan_key(self) -> tuple:
@@ -442,8 +589,8 @@ class ServeEngine:
                 batch[key] = fe
                 fe_sig = (key, tuple(fe.shape[1:]), str(fe.dtype))
             self._prefill_shapes.add((bucket, fe_sig))
-            logits, one_cache = self._gen.prefill(self.params, batch,
-                                                  jnp.asarray(n, jnp.int32))
+            logits, one_cache = self._plan_call("prefill", self.params, batch,
+                                                jnp.asarray(n, jnp.int32))
             self.cache = cache_insert(self.cache, one_cache, slot)
             first = int(self._sample_tokens(
                 logits[:, -1], [req.rid], [0],
@@ -468,8 +615,12 @@ class ServeEngine:
             return 0
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
-        logits, self.cache = self._gen.decode(self.params, self.cache,
-                                              toks, pos)
+        # commit the cache only AFTER the guard: a faulting plan's outputs
+        # (logits AND cache) are discarded whole, so a rollback retries the
+        # step from the exact pre-tick state
+        logits, new_cache = self._plan_call("decode", self.params, self.cache,
+                                            toks, pos)
+        self.cache = new_cache
         steps = np.asarray([len(r.generated) if r is not None else 0
                             for r in self.active], np.int32)
         nxt = self._sample_tokens(logits[:, -1], self._rids, steps,
@@ -492,6 +643,9 @@ class ServeEngine:
         self._install_pending()
         admitted = self._admit()
         decoded = self._tick_decode()
+        # the serving generation survived a full tick: it is now a trusted
+        # rollback target for future swaps
+        self._gen_healthy = True
         self._events.append({
             "tick": self.ticks,
             "active": sum(r is not None for r in self.active),
@@ -542,6 +696,8 @@ class ServeEngine:
             "ticks": self.ticks,
             "plan_generation": self.plan_generation,
             "swaps": self.swaps,
+            "rollbacks": self.rollbacks,
+            "degraded": self.degraded,
             "slot_occupancy": active / self.slots if self.slots else 0.0,
         }
 

@@ -25,7 +25,9 @@ module closes the loop (ROADMAP "online replanning"):
    ``AutoOffloader`` keeps its ``CompileCache`` warm across replans.
 
 3. **Atomic hot-swap**: a strictly-better winner is traced and pre-warmed
-   off-thread (``engine.prepare_plan``) and staged with
+   off-thread (``engine.prepare_plan``), canary-validated
+   (``engine.canary_check`` — no exception, finite logits, bit-equal to the
+   serving plan on a synthetic batch) and only then staged with
    ``engine.offer_plan``; the engine installs it between ticks under the
    generation counter.  No request is dropped or re-queued, no tick blocks
    on search or compile, and token streams are unchanged for
@@ -39,6 +41,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.planner import conditions_from_stats
+from repro.core.search import impl_key
 
 
 @dataclass(frozen=True)
@@ -165,6 +168,11 @@ class ReplanConfig:
       (strictly-better gate); when the serving plan was never measured
       (e.g. arch defaults), any measured winner with a different canonical
       key is offered.
+    * ``canary`` (bool, True) — validate every candidate with
+      ``engine.canary_check`` (no exception, finite logits, bit-equal to
+      the serving plan on a synthetic batch) before ``offer_plan``; a
+      rejected candidate's key is never offered again and its non-ref
+      genes are reported to the shared quarantine.
     * ``window`` (int, 32) — ticks of windowed stats fed to
       ``conditions_from_stats`` and the detector.
     """
@@ -172,6 +180,7 @@ class ReplanConfig:
     on_drift: bool = False
     background: bool = True
     min_speedup: float = 1.0
+    canary: bool = True
     window: int = 32
 
 
@@ -187,30 +196,50 @@ class Replanner:
     substitute cheap toy programs or scripted reports.
 
     Counters: ``replans`` (searches completed), ``offers`` (strictly-better
-    plans staged), ``skipped_same``/``skipped_slower`` (searches whose
-    winner didn't earn a swap); ``last_report``/``last_conditions``/
-    ``last_error`` expose the most recent search for tests and telemetry.
+    plans staged), ``skipped_same``/``skipped_slower``/``skipped_rejected``
+    (searches whose winner didn't earn a swap), ``canary_rejects`` (winners
+    the canary vetoed), ``plan_faults`` (engine rollbacks reported back via
+    ``on_plan_fault``); ``last_report``/``last_conditions``/``last_error``/
+    ``last_canary_reason`` expose the most recent search for tests and
+    telemetry.
+
+    ``quarantine`` (optional, a ``core.search.Quarantine``) receives the
+    non-ref genes of every canary-rejected or runtime-faulted plan — share
+    the instance with the ``AutoOffloader`` behind ``plan_fn`` and the
+    search stops proposing those genes on the very next replan.
+
+    The background worker thread is joined by ``close()`` (also a context
+    manager): a closed replanner ignores further ticks, so the thread can
+    never outlive the serving loop that owns it.
     """
 
     def __init__(self, plan_fn: Callable[[dict], object], *,
                  config: ReplanConfig = ReplanConfig(),
-                 detector: Optional[DriftDetector] = None):
+                 detector: Optional[DriftDetector] = None,
+                 quarantine=None):
         self.plan_fn = plan_fn
         self.config = config
         self.detector = detector
         if self.detector is None and config.on_drift:
             self.detector = DriftDetector(DriftConfig(window=config.window))
+        self.quarantine = quarantine
         self._busy = False
+        self._closed = False
         self._thread: Optional[threading.Thread] = None
         self._last_trigger_tick = -(10 ** 9)
         self.replans = 0
         self.offers = 0
         self.skipped_same = 0
         self.skipped_slower = 0
+        self.skipped_rejected = 0
+        self.canary_rejects = 0
+        self.plan_faults = 0
+        self._rejected_keys: set = set()
         self.last_report = None
         self.last_conditions: Optional[dict] = None
         self.last_trigger: Optional[str] = None
         self.last_error: Optional[BaseException] = None
+        self.last_canary_reason: Optional[str] = None
 
     def attach(self, engine) -> None:
         """Called by ``engine.attach_replanner``; nothing to do eagerly —
@@ -222,7 +251,7 @@ class Replanner:
         searches or compiles inline (unless ``background=False``): it reads
         the windowed stats, consults the triggers, and hands the slow work
         to a worker thread."""
-        if self._busy:
+        if self._busy or self._closed:
             return
         stats = engine.stats(window=self.config.window)
         trigger = None
@@ -251,6 +280,42 @@ class Replanner:
         if t is not None and t.is_alive():
             t.join(timeout)
 
+    def close(self, timeout: float = 10.0) -> None:
+        """Shut the replanner down: refuse further triggers, then join any
+        in-flight background replan.  A worker that outlives ``timeout`` is
+        abandoned (it is a daemon thread) and recorded in ``last_error`` —
+        the owner surfaces it rather than hanging shutdown forever.
+        Idempotent; also available as a context manager."""
+        self._closed = True
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+            if t.is_alive():
+                self.last_error = TimeoutError(
+                    f"background replan still running after {timeout:.1f}s; "
+                    "daemon thread abandoned")
+
+    def __enter__(self) -> "Replanner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    def on_plan_fault(self, impl, reason: str) -> None:
+        """Engine callback: ``impl`` faulted on the tick path and was rolled
+        back.  Its key is permanently refused (never offered again) and its
+        non-ref genes go to the shared quarantine so the next search stops
+        proposing them."""
+        self._rejected_keys.add(impl_key(impl))
+        self.plan_faults += 1
+        if self.quarantine is not None:
+            self.quarantine.record_failure(impl, reason)
+
+    def _quarantine_impl(self, impl, reason: str) -> None:
+        if self.quarantine is not None:
+            self.quarantine.record_failure(impl, reason)
+
     # ------------------------------------------------------------------
     def _replan(self, engine, stats: dict, trigger: str) -> None:
         """Search + trace build, off the tick path.  Offers the winner only
@@ -269,10 +334,25 @@ class Replanner:
             current_seconds = engine.plan_seconds
             if prepared.key == engine.plan_key:
                 self.skipped_same += 1
+            elif prepared.key in self._rejected_keys:
+                self.skipped_rejected += 1
             elif (current_seconds is not None and best_seconds > 0
                     and best_seconds * self.config.min_speedup
                     >= current_seconds):
                 self.skipped_slower += 1
+            elif self.config.canary and hasattr(engine, "canary_check"):
+                ok, reason = engine.canary_check(prepared)
+                if ok:
+                    engine.offer_plan(prepared)
+                    self.offers += 1
+                else:
+                    # a canary-vetoed plan is permanently refused and its
+                    # genes reported to the shared quarantine — the next
+                    # search will not re-propose them
+                    self.canary_rejects += 1
+                    self.last_canary_reason = reason
+                    self._rejected_keys.add(prepared.key)
+                    self._quarantine_impl(prepared.impl, reason)
             else:
                 engine.offer_plan(prepared)
                 self.offers += 1
@@ -295,6 +375,9 @@ class Replanner:
             "offers": self.offers,
             "skipped_same": self.skipped_same,
             "skipped_slower": self.skipped_slower,
+            "skipped_rejected": self.skipped_rejected,
+            "canary_rejects": self.canary_rejects,
+            "plan_faults": self.plan_faults,
             "detector_fired": self.detector.fired if self.detector else 0,
             "busy": self._busy,
         }

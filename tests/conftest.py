@@ -1,5 +1,7 @@
 import os
+import signal
 import sys
+import threading
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -9,3 +11,69 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Per-test wall ceiling (pytest.ini `timeout`): pytest-timeout enforces it
+# when installed (CI).  When the plugin is absent we fall back to a SIGALRM
+# alarm so a hung compile/measure/serve loop still fails the one test
+# instead of wedging the whole run.  The fallback is best-effort: it only
+# fires on the main thread of a POSIX process (which is where pytest runs
+# tests), and a hang inside C code that never returns to the interpreter
+# can outlive it — pytest-timeout's thread method covers that case in CI.
+# ---------------------------------------------------------------------------
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_addoption(parser):
+    if not _HAVE_PYTEST_TIMEOUT:
+        # register the ini keys pytest-timeout would own, so pytest.ini can
+        # declare them unconditionally
+        parser.addini("timeout", "per-test seconds (SIGALRM fallback)",
+                      default="0")
+        parser.addini("timeout_method", "ignored by the fallback",
+                      default="thread")
+
+
+def _fallback_timeout(item) -> float:
+    marker = item.get_closest_marker("timeout")
+    if marker is not None and marker.args:
+        return float(marker.args[0])
+    try:
+        return float(item.config.getini("timeout"))
+    except (TypeError, ValueError):
+        return 0.0
+
+
+if not _HAVE_PYTEST_TIMEOUT and hasattr(signal, "SIGALRM"):
+
+    def pytest_configure(config):
+        config.addinivalue_line(
+            "markers", "timeout(seconds): per-test wall ceiling "
+            "(pytest-timeout when installed, SIGALRM fallback otherwise)")
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        seconds = _fallback_timeout(item)
+        if (seconds <= 0
+                or threading.current_thread() is not threading.main_thread()):
+            yield
+            return
+
+        def _on_alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded the {seconds:.0f}s per-test ceiling "
+                "(pytest.ini timeout; SIGALRM fallback)")
+
+        old = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.setitimer(signal.ITIMER_REAL, seconds)
+        try:
+            yield
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, old)

@@ -12,7 +12,8 @@ import pytest
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ROOT / "docs"
 PAGES = ("architecture.md", "search-strategies.md", "plan-cache.md",
-         "loop-extraction.md", "serving-replanning.md")
+         "loop-extraction.md", "serving-replanning.md",
+         "fault-tolerance.md")
 
 # the public surfaces the ISSUE-4 API pass documents: module -> symbols
 DOCUMENTED = {
@@ -26,9 +27,13 @@ DOCUMENTED = {
     "repro.core.search": ["Measurement", "MeasurementLedger",
                           "time_callable", "impl_key", "aot_compile",
                           "aot_lower", "finish_compile",
-                          "CompiledArtifact"],
+                          "CompiledArtifact", "Quarantine",
+                          "classify_failure", "watchdog_call"],
     "repro.core.executor": ["VerificationExecutor", "CompileCache",
-                            "VerifyJob", "compile_key", "ExecutorStats"],
+                            "VerifyJob", "compile_key", "ExecutorStats",
+                            "FaultPolicy", "measure_with_retry"],
+    "repro.core.faults": ["FaultInjector", "FaultSpec", "InjectedFault",
+                          "wrap_program", "KINDS", "SITES"],
     "repro.core.cost_model": ["CostModel", "HOST_SHARE"],
     "repro.core.plan_cache": ["PlanCache", "plan_cache_key",
                               "measurement_cache_key", "resolve_cache"],
@@ -42,7 +47,7 @@ DOCUMENTED = {
                            "enumerate_sites", "FAMILIES"],
     "repro.core.intensity": ["RegionAnalysis", "analyze_region",
                              "count_loops", "alignment_penalty"],
-    "repro.serving.engine": ["ServeEngine", "PlanGeneration"],
+    "repro.serving.engine": ["ServeEngine", "PlanGeneration", "PlanFault"],
     "repro.serving.replan": ["Replanner", "ReplanConfig", "DriftDetector",
                              "DriftConfig"],
 }

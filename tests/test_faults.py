@@ -1,0 +1,597 @@
+"""Fault-tolerant measurement and serving (ISSUE 10 acceptance).
+
+Exercises the fault-injection harness (``core/faults.py``) against the
+hardened measurement path — watchdog timeouts, transient-vs-permanent
+classification, bounded retry with honest billing, ledger budget refunds,
+MAD outlier rejection — and the serving-side graceful degradation: canary
+validation before ``offer_plan``, runtime rollback to the last healthy
+generation with zero dropped requests, and quarantine persistence through
+the plan cache.
+
+The two tentpole invariants, test-asserted:
+
+* under injected *transient* faults, a plan run completes and selects the
+  SAME winner as a fault-free run, at any ``verify_workers``;
+* a bad plan swapped in mid-serve triggers a rollback within one tick and
+  every in-flight request finishes with token streams bit-identical to a
+  never-swapped twin engine.
+"""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from serving_harness import (Phase, ScriptedTraffic, assert_streams_equal,
+                             check_conservation, drive)
+
+from repro.configs import get_config
+from repro.core.executor import (FaultPolicy, VerificationExecutor,
+                                 measure_with_retry)
+from repro.core.faults import (FaultInjector, FaultSpec, InjectedFault,
+                               wrap_program)
+from repro.core.plan_cache import PlanCache, measurement_cache_key
+from repro.core.planner import AutoOffloader, PlannerConfig
+from repro.core.program import OffloadableProgram, Region
+from repro.core.regions import (Impl, dispatch, register_variant,
+                                unregister_variant, variants)
+from repro.core.search import (Measurement, MeasurementLedger, Quarantine,
+                               classify_failure, time_callable,
+                               watchdog_call)
+from repro.models import factory as F
+from repro.serving.engine import PlanFault, ServeEngine
+from repro.serving.replan import ReplanConfig, Replanner
+
+_counter = [0]
+
+
+def _slow_ref(x):
+    def body(i, acc):
+        return acc + 1e-6 * jnp.sin(acc * 1e-3)
+    return jax.lax.fori_loop(0, 400, body, x)
+
+
+def _toy_program():
+    """Two-region toy (same shape as test_executor): offload variants are
+    decisively faster than the fori-loop refs, so the fault-free winner is
+    deterministic under real timing."""
+    tag = f"faults_{_counter[0]}"
+    _counter[0] += 1
+    a, b = f"{tag}_a", f"{tag}_b"
+    register_variant(a, "ref")(_slow_ref)
+    register_variant(a, "offload")(lambda x: x * 1.0000001)
+    register_variant(b, "ref")(_slow_ref)
+    register_variant(b, "offload")(lambda x: x - 1e-7)
+
+    def build(impl):
+        def run(x):
+            x = dispatch(a, impl, x)
+            return dispatch(b, impl, x)
+        return run
+
+    abstract = (jax.ShapeDtypeStruct((128, 128), jnp.float32),)
+    regions = [Region(a, variants(a)["ref"], abstract),
+               Region(b, variants(b)["ref"], abstract)]
+    prog = OffloadableProgram(
+        name=f"faults_toy_{tag}", regions=regions, build=build,
+        sample_inputs=lambda k: (jax.random.normal(k, (128, 128)),),
+        source_loop_count=2)
+    return prog, a, b
+
+
+def _built(injector, impl=None):
+    """(fn, args) of a toy program wrapped with ``injector``."""
+    prog, a, b = _toy_program()
+    wrapped = wrap_program(prog, injector)
+    fn = wrapped.build(Impl(dict(impl or {})))
+    args = wrapped.sample_inputs(jax.random.PRNGKey(0))
+    return fn, args
+
+
+# ---------------------------------------------------------------------------
+# injector determinism + classification
+# ---------------------------------------------------------------------------
+def test_injector_budget_is_deterministic_and_per_key():
+    inj = FaultInjector(specs=[FaultSpec("nan", site="run", times=2)])
+    assert inj.fire("run", "p1") is not None
+    assert inj.fire("run", "p1") is not None
+    assert inj.fire("run", "p1") is None          # budget for p1 exhausted
+    assert inj.fire("run", "p2") is not None      # budget is per key
+    assert inj.fire("compile", "p1") is None      # wrong site never fires
+    assert inj.fired("nan") == 3
+    assert inj.log == [("run", "p1", "nan"), ("run", "p1", "nan"),
+                       ("run", "p2", "nan")]
+    inj.reset()
+    assert inj.fired() == 0 and inj.fire("run", "p1") is not None
+
+
+def test_injector_match_targets_one_pattern():
+    inj = FaultInjector(specs=[
+        FaultSpec("exception", site="compile", match="a=offload", times=0)])
+    assert inj.fire("compile", "b=offload") is None
+    with pytest.raises(InjectedFault, match=r"InjectedFault\[exception/"):
+        inj.fire("compile", "a=offload+b=offload")
+
+
+def test_injected_fault_messages_classify():
+    flaky = InjectedFault("flaky", "run", "p", transient=True)
+    perm = InjectedFault("exception", "compile", "p", transient=False)
+    assert classify_failure(str(flaky)) == "transient"
+    assert classify_failure(str(perm)) == "permanent"
+    assert classify_failure("WatchdogTimeout: exceeded 1s") == "transient"
+    assert classify_failure("NonFiniteOutput: NaN") == "permanent"
+    assert classify_failure("TypeError: whatever") == "permanent"
+    with pytest.raises(ValueError):
+        FaultSpec("meteor")
+    with pytest.raises(ValueError):
+        FaultSpec("nan", site="orbit")
+
+
+def test_watchdog_expires_and_classifies_transient():
+    ok, val, err = watchdog_call(lambda: 42, timeout_s=5.0)
+    assert ok and val == 42 and err == ""
+    ev = threading.Event()
+    ok, val, err = watchdog_call(ev.wait, (0.8,), timeout_s=0.1)
+    assert not ok and "WatchdogTimeout" in err
+    assert classify_failure(err) == "transient"
+    ev.set()
+
+
+# ---------------------------------------------------------------------------
+# time_callable under injected faults
+# ---------------------------------------------------------------------------
+def test_nan_output_fails_permanent_with_finite_check():
+    inj = FaultInjector(specs=[FaultSpec("nan", site="run", times=0)])
+    fn, args = _built(inj)
+    m = time_callable(fn, args, warmup=0, reps=1, check_finite=True)
+    assert not m.ok and "NonFiniteOutput" in m.error
+    assert m.failure_kind == "permanent" and m.failure_phase == "run"
+    assert m.compile_seconds > 0          # the successful compile is billed
+    # without the check the garbage output would have "won" on speed
+    inj2 = FaultInjector(specs=[FaultSpec("nan", site="run", times=0)])
+    fn2, args2 = _built(inj2)
+    assert time_callable(fn2, args2, warmup=0, reps=1, check_finite=False).ok
+
+
+def test_compile_exception_fails_compile_phase():
+    inj = FaultInjector(specs=[
+        FaultSpec("exception", site="compile", times=0, transient=False)])
+    fn, args = _built(inj)
+    m = time_callable(fn, args, warmup=0, reps=1)
+    assert not m.ok and m.failure_phase == "compile"
+    assert m.failure_kind == "permanent" and "InjectedFault" in m.error
+
+
+def test_run_hang_times_out_transient():
+    inj = FaultInjector(specs=[
+        FaultSpec("hang", site="run", delay_s=0.6, times=0)])
+    fn, args = _built(inj)
+    m = time_callable(fn, args, warmup=0, reps=1, run_timeout_s=0.15)
+    assert not m.ok and "RunTimeout" in m.error
+    assert m.failure_kind == "transient" and m.failure_phase == "run"
+
+
+def test_mad_rejects_injected_slow_rep():
+    runs = [1.0, 1.01, 0.99, 1.02, 50.0]
+    from repro.core.search import _mad_reject
+    kept, rejected = _mad_reject(runs, 3.5)
+    assert rejected == 1 and 50.0 not in kept
+    # zero MAD (>= half identical) rejects nothing
+    assert _mad_reject([1.0, 1.0, 1.0, 9.9], 3.5) == ([1.0, 1.0, 1.0, 9.9], 0)
+
+
+# ---------------------------------------------------------------------------
+# bounded retry: flaky faults survive, billing is honest
+# ---------------------------------------------------------------------------
+def test_flaky_fault_retried_to_success_and_billed():
+    inj = FaultInjector(specs=[FaultSpec("flaky", site="run", times=1)])
+    fn, args = _built(inj)
+    attempts_log = []
+
+    def once():
+        m = time_callable(fn, args, warmup=0, reps=1)
+        attempts_log.append(m.ok)
+        return m, True                    # each attempt compiles fresh
+
+    m = measure_with_retry(once, FaultPolicy(retry_backoff_s=0.0))
+    assert m.ok and m.attempts == 2
+    assert attempts_log == [False, True]
+    assert inj.fired("flaky") == 1        # fired exactly once, then quiet
+
+
+def test_permanent_failure_never_retries():
+    inj = FaultInjector(specs=[
+        FaultSpec("exception", site="run", times=0, transient=False)])
+    fn, args = _built(inj)
+    calls = [0]
+
+    def once():
+        calls[0] += 1
+        return time_callable(fn, args, warmup=0, reps=1), True
+
+    m = measure_with_retry(once, FaultPolicy(max_retries=3,
+                                             retry_backoff_s=0.0))
+    assert not m.ok and m.attempts == 1 and calls[0] == 1
+    assert m.failure_kind == "permanent"
+
+
+def test_retry_exhaustion_reports_transient_failure():
+    inj = FaultInjector(specs=[FaultSpec("flaky", site="run", times=10)])
+    fn, args = _built(inj)
+    m = measure_with_retry(
+        lambda: (time_callable(fn, args, warmup=0, reps=1), True),
+        FaultPolicy(max_retries=2, retry_backoff_s=0.0))
+    assert not m.ok and m.attempts == 3   # 1 try + 2 retries
+    assert m.failure_kind == "transient"
+
+
+# ---------------------------------------------------------------------------
+# ledger bookkeeping on exception paths (satellite bugfix regression)
+# ---------------------------------------------------------------------------
+def test_ledger_refunds_budget_when_measure_fn_raises():
+    calls = [0]
+
+    def measure_fn(impl):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise InjectedFault("flaky", "run", "p", transient=True)
+        return Measurement("p", 0.01, 1.0, [1.0], impl=dict(impl))
+
+    led = MeasurementLedger(measure_fn=measure_fn, budget=2)
+    with pytest.raises(InjectedFault):
+        led.measure({"r": "offload"})
+    # the failed attempt stored nothing, so it must not have billed: the
+    # budget is refunded, the miss counter rolled back, and no inflight
+    # event is left to deadlock a concurrent asker
+    assert led.budget == 2 and led.misses == 0 and not led._inflight
+    m = led.measure({"r": "offload"})     # the retry bills exactly once
+    assert m is not None and m.ok
+    assert led.budget == 1 and led.misses == 1 and calls[0] == 2
+
+
+def test_ledger_batch_refunds_on_exception_and_short_return():
+    def boom(batch):
+        raise RuntimeError("executor died")
+
+    led = MeasurementLedger(measure_fn=lambda i: None, budget=4,
+                            measure_batch_fn=boom)
+    with pytest.raises(RuntimeError):
+        led.measure_batch([{"r": "offload"}, {"r": "fast"}])
+    assert led.budget == 4 and led.misses == 0 and not led._inflight
+
+    def short(batch):                     # loses the tail of the batch
+        return [Measurement("p", 0.0, 1.0, [1.0], impl=dict(batch[0]))]
+
+    led2 = MeasurementLedger(measure_fn=lambda i: None, budget=4,
+                             measure_batch_fn=short)
+    ms = led2.measure_batch([{"r": "offload"}, {"r": "fast"}])
+    assert ms[0] is not None and ms[1] is None
+    assert led2.budget == 3 and led2.misses == 1 and not led2._inflight
+
+
+def test_ledger_records_failures_into_quarantine():
+    def failing(impl):
+        return Measurement(Impl(dict(impl)).describe(), 0.0, float("inf"),
+                           [], False, "InjectedFault[nan/permanent]",
+                           impl=dict(impl))
+
+    q = Quarantine(threshold=2)
+    led = MeasurementLedger(measure_fn=failing, budget=4, quarantine=q)
+    led.measure({"r": "pallas"})
+    assert not q.is_quarantined("r", "pallas")      # one strike
+    led.measure({"r": "pallas", "s": "pallas"})     # second strike for r
+    assert q.is_quarantined("r", "pallas")
+    assert q.strikes()["s=pallas"] == 1
+    assert [m.error for m in led.failures()] == [
+        "InjectedFault[nan/permanent]"] * 2
+
+
+# ---------------------------------------------------------------------------
+# quarantine identity + persistence round-trip
+# ---------------------------------------------------------------------------
+def test_quarantine_roundtrips_records_max_wins():
+    q = Quarantine(threshold=3)
+    q.record_failure({"r": "pallas"}, "boom")
+    q.record_failure({"r": "pallas"}, "boom again")
+    recs = q.to_records()
+    assert recs == [{"gene": "r=pallas", "strikes": 2,
+                     "last_error": "boom again"}]
+    q2 = Quarantine(threshold=3)
+    q2.load_records(recs)
+    q2.load_records([{"gene": "r=pallas", "strikes": 1,
+                      "last_error": "stale"}])      # lower count never wins
+    assert q2.strikes() == {"r=pallas": 2}
+    q2.record_failure({"r": "pallas"}, "third")
+    assert q2.blocked() == ["r=pallas"]
+    assert not q2.allows({"r": "pallas", "other": "ref"})
+    assert q2.allows({"other": "offload"})
+    # garbage records are ignored, not fatal
+    q2.load_records([{"gene": 7}, "nope", {"strikes": "x"}, None])
+
+
+def test_nan_gene_quarantined_and_persisted_through_plan_cache(tmp_path):
+    """Permanent NaN faults strike the offending gene; once quarantined it
+    stops being proposed mid-run, the record persists in the plan cache
+    under the measurement key, and a re-keyed later run loads it and never
+    re-measures the known-bad gene."""
+    prog, a, b = _toy_program()
+    gene = f"{a}=offload"
+    inj = FaultInjector(specs=[
+        FaultSpec("nan", site="run", match=gene, times=0, transient=False)])
+    wrapped = wrap_program(prog, inj)
+    cache = PlanCache(tmp_path / "plans.json")
+    rep = AutoOffloader(PlannerConfig(reps=1, warmup=0,
+                                      quarantine_threshold=1)).plan(
+        wrapped, cache=cache)
+    assert gene in rep.quarantined
+    assert rep.quarantine_records and rep.quarantine_records[0]["strikes"] >= 1
+    assert gene not in Impl(rep.best_pattern).describe()
+    assert rep.best_pattern == {b: "offload"}       # the healthy gene wins
+
+    recs = cache.quarantine_for(measurement_cache_key(wrapped))
+    q = Quarantine(threshold=1)
+    q.load_records(recs)
+    assert q.is_quarantined(a, "offload")
+
+    # different strategy -> different plan key, same measurement key: the
+    # new search loads the quarantine and never proposes the bad gene again
+    fired_before = inj.fired()
+    rep2 = AutoOffloader(PlannerConfig(reps=1, warmup=0,
+                                       strategy="exhaustive",
+                                       quarantine_threshold=1)).plan(
+        wrapped, cache=cache)
+    assert not rep2.from_cache
+    assert gene in rep2.quarantined
+    assert all(gene not in m.pattern for m in rep2.measurements)
+    assert inj.fired() == fired_before    # the bad gene never ran again
+
+
+def test_preloaded_quarantine_filters_strategy_proposals():
+    prog, a, b = _toy_program()
+    off = AutoOffloader(PlannerConfig(reps=1, warmup=0,
+                                      quarantine_threshold=1))
+    off.quarantine.record_failure({a: "offload"}, "known bad")
+    rep = off.plan(prog)
+    assert f"{a}=offload" in rep.quarantined
+    assert all(f"{a}=offload" not in m.pattern for m in rep.measurements)
+    assert rep.best_pattern == {b: "offload"}
+
+
+# ---------------------------------------------------------------------------
+# TENTPOLE: plan determinism under injected transient faults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [1, 3])
+def test_plan_same_winner_under_transient_faults(workers):
+    """A fault-free plan and a plan under injected transient faults (flaky
+    run failures + a compile hang caught by the watchdog) select the SAME
+    winner within the same budget, at any verify_workers — transient faults
+    cost retries, never correctness."""
+    prog, a, b = _toy_program()
+    cfg = PlannerConfig(reps=2, warmup=0, verify_workers=workers,
+                        compile_timeout_s=5.0, run_timeout_s=5.0,
+                        retry_backoff_s=0.0)
+    clean = AutoOffloader(cfg).plan(prog)
+    assert clean.best_pattern == {a: "offload", b: "offload"}
+
+    inj = FaultInjector(specs=[FaultSpec("flaky", site="run", times=1)])
+    faulted = AutoOffloader(cfg).plan(wrap_program(prog, inj))
+    assert inj.fired("flaky") > 0         # faults really were injected
+    assert faulted.best_pattern == clean.best_pattern
+    assert faulted.speedup > 1.0
+    assert faulted.quarantined == []      # transient faults never strike
+    # retry provenance is visible on the measurements that were hit
+    assert max(m.attempts for m in faulted.measurements + [faulted.baseline]
+               if m is not None) >= 2
+
+
+def test_executor_survives_compile_hang_with_timeout():
+    """A hung compile under ``compile_timeout_s`` is abandoned, classified
+    transient, retried, and — because the flaky budget is exhausted — the
+    retry succeeds; the measurement is billed with its retry."""
+    inj = FaultInjector(specs=[
+        FaultSpec("hang", site="compile", delay_s=0.7, times=1)])
+    fn, args = _built(inj)
+    policy = FaultPolicy(compile_timeout_s=0.25, retry_backoff_s=0.0)
+
+    def once():
+        m = time_callable(fn, args, warmup=0, reps=1,
+                          compile_timeout_s=policy.compile_timeout_s)
+        return m, True
+
+    m = measure_with_retry(once, policy)
+    assert m.ok and m.attempts == 2
+    assert inj.fired("hang") == 1
+
+
+# ---------------------------------------------------------------------------
+# serving: canary, rollback, zero dropped requests
+# ---------------------------------------------------------------------------
+KEY = jax.random.PRNGKey(0)
+_CTX_BOX: list = []
+
+
+def _ctx():
+    if not _CTX_BOX:
+        cfg = dataclasses.replace(get_config("qwen2-72b").reduced(),
+                                  dtype="float32")
+        _CTX_BOX.append((cfg, F.init_params(cfg, KEY)))
+    return _CTX_BOX[0]
+
+
+def _engine(**kw):
+    cfg, params = _ctx()
+    kw.setdefault("slots", 2)
+    kw.setdefault("ctx", 32)
+    return ServeEngine(cfg, params, seed=0, **kw)
+
+
+def _poison_mlp(x, w_gate, w_up, w_down):
+    ref = variants("mlp_core")["ref"]
+    return ref(x, w_gate, w_up, w_down) * jnp.nan
+
+
+class _Report:
+    def __init__(self, impl, best_seconds=1e-6):
+        self.best_pattern = dict(impl)
+        self.best_seconds = best_seconds
+        self.measurements = []
+        self.reused = []
+
+    def best_impl(self):
+        return Impl(self.best_pattern)
+
+
+@pytest.fixture
+def poison_variant():
+    register_variant("mlp_core", "poison")(_poison_mlp)
+    try:
+        yield "poison"
+    finally:
+        unregister_variant("mlp_core", "poison")
+
+
+def test_engine_rolls_back_bad_plan_with_zero_drops(poison_variant):
+    """TENTPOLE: a NaN-producing plan swapped in mid-serve triggers a
+    rollback within the same tick; no request is dropped, conservation
+    holds every tick, and every token stream is bit-identical to a twin
+    engine that never saw the swap."""
+    eng, twin = _engine(), _engine()
+    lead = ScriptedTraffic((Phase(ticks=2, per_tick=1, min_len=4, max_len=6,
+                                  max_new=8),), seed=3)
+    for engine in (eng, twin):
+        for prompt, max_new in [r for t in lead.schedule for r in t]:
+            engine.submit(prompt, max_new_tokens=max_new)
+        engine.step()
+        engine.step()
+    original_key = eng.plan_key
+    bad = eng.prepare_plan({"mlp_core": "poison"}, warm=False)
+    eng.offer_plan(bad)
+    eng.step()                            # install + fault + rollback, 1 tick
+    twin.step()
+    assert eng.rollbacks == 1 and eng.degraded
+    assert eng.plan_key == original_key   # back on the last healthy plan
+    assert "non-finite" in eng.last_fault
+    check_conservation(eng)
+
+    tail = ScriptedTraffic((Phase(ticks=3, per_tick=1, min_len=4, max_len=6,
+                                  max_new=6),), seed=5)
+    done = drive(eng, tail)
+    done_twin = drive(twin, tail)
+    assert_streams_equal(done_twin, done)
+    assert eng.stats()["rollbacks"] == 1
+
+    # a faulted plan key is refused re-installation forever
+    eng.offer_plan(eng.prepare_plan({"mlp_core": "poison"}, warm=False))
+    eng.step()
+    assert eng.rollbacks == 1 and eng.plan_key == original_key
+
+
+def test_rollback_reaches_all_ref_terminal_fallback(poison_variant):
+    """An engine BOOTED on a broken plan (no healthy fallback ever pushed)
+    still degrades to the terminal all-ref generation and serves every
+    request; when the all-ref plan itself faults there is nothing left to
+    roll back to and ``_rollback`` refuses."""
+    eng = _engine(impl={"mlp_core": "poison"})    # boot on a broken plan
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    done = eng.run_to_completion()
+    assert len(done) == 1 and done[0].generated
+    assert eng.rollbacks == 1 and eng.degraded
+    assert eng.plan_key == _engine().plan_key     # landed on all-ref
+    # the all-ref generation is the floor: a fault THERE has no target
+    assert not eng._rollback(eng._gen, "decode", RuntimeError("boom"))
+
+
+def test_canary_rejects_poison_before_offer(poison_variant):
+    """The canary gate vetoes a non-finite candidate off the tick path:
+    no swap, no rollback, the gene is quarantined, and the rejected key is
+    never offered again."""
+    eng = _engine()
+    q = Quarantine(threshold=1)
+    rp = Replanner(lambda c: _Report({"mlp_core": "poison"}),
+                   config=ReplanConfig(every_ticks=1, background=False),
+                   quarantine=q)
+    eng.attach_replanner(rp)
+    eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=6)
+    eng.run_to_completion()
+    assert rp.canary_rejects == 1 and rp.offers == 0
+    assert rp.skipped_rejected >= 1       # later replans skip the known-bad
+    assert "non-finite" in rp.last_canary_reason
+    assert eng.swaps == 0 and eng.rollbacks == 0
+    assert q.is_quarantined("mlp_core", "poison")
+
+
+def test_canary_accepts_numerics_identical_plan():
+    """A candidate whose pattern differs only on regions the model never
+    dispatches is bit-identical — the canary passes it and the swap lands."""
+    eng = _engine()
+    rp = Replanner(lambda c: _Report({"canary_probe": "offload"}),
+                   config=ReplanConfig(every_ticks=1, background=False))
+    eng.attach_replanner(rp)
+    eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=6)
+    eng.run_to_completion()
+    assert rp.canary_rejects == 0 and rp.offers == 1
+    assert eng.swaps == 1
+
+
+def test_runtime_fault_feeds_quarantine_via_on_plan_fault(poison_variant):
+    """With the canary off, the bad plan installs, faults, rolls back, and
+    the engine reports the impl back to the replanner — quarantining its
+    genes and refusing the key, so the next search round skips it."""
+    eng = _engine()
+    q = Quarantine(threshold=1)
+    rp = Replanner(lambda c: _Report({"mlp_core": "poison"}),
+                   config=ReplanConfig(every_ticks=1, background=False,
+                                       canary=False),
+                   quarantine=q)
+    eng.attach_replanner(rp)
+    eng.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=8)
+    eng.run_to_completion()
+    assert eng.rollbacks == 1 and rp.plan_faults == 1
+    assert q.is_quarantined("mlp_core", "poison")
+    assert rp.skipped_rejected >= 1
+
+
+# ---------------------------------------------------------------------------
+# replanner lifecycle (satellite bugfix: the daemon thread is now joined)
+# ---------------------------------------------------------------------------
+def test_replanner_close_joins_background_thread():
+    release = threading.Event()
+    started = threading.Event()
+
+    def plan_fn(conditions):
+        started.set()
+        release.wait(10)
+        return _Report({"close_probe": "offload"})
+
+    eng = _engine()
+    rp = Replanner(plan_fn, config=ReplanConfig(every_ticks=1))
+    eng.attach_replanner(rp)
+    eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    eng.step()
+    assert started.wait(10) and rp._thread.is_alive()
+    release.set()
+    rp.close(timeout=30.0)
+    assert not rp._thread.is_alive() and rp.last_error is None
+    # closed: further ticks never spawn work
+    thread_after_close = rp._thread
+    eng.run_to_completion()
+    assert rp._thread is thread_after_close
+
+
+def test_replanner_context_manager_and_close_timeout():
+    release = threading.Event()
+
+    def plan_fn(conditions):
+        release.wait(10)
+        return _Report({"ctx_probe": "offload"})
+
+    eng = _engine()
+    with Replanner(plan_fn, config=ReplanConfig(every_ticks=1)) as rp:
+        eng.attach_replanner(rp)
+        eng.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+        eng.step()
+        rp.close(timeout=0.05)            # worker still blocked: abandoned
+        assert isinstance(rp.last_error, TimeoutError)
+        release.set()
+    rp.join(timeout=30.0)                 # the daemon drains once released

@@ -21,7 +21,15 @@
    never searches those knobs.  A knob that is deliberately not tunable
    takes a ``# no-tuning: <why>`` comment on the decorator line.
 
-4. Recognizer coverage: every extractor family in
+4. Silent exception swallowing in the fault-tolerant trees
+   (``src/repro/core`` and ``src/repro/serving``): a bare
+   ``except:`` / ``except Exception:`` / ``except BaseException:`` whose
+   body is only ``pass`` hides exactly the failures the fault-tolerance
+   layer is supposed to classify (transient vs permanent), retry, or
+   quarantine.  Handlers must either name the exception types they absorb
+   or do something with the error (log, record, re-raise).
+
+5. Recognizer coverage: every extractor family in
    ``core/extract.py::FAMILIES`` must map to a ``_match_*`` recognizer in
    ``RECOGNIZERS`` *and* declare at least one positive and one negative
    test in ``tests/test_extract.py::COVERAGE`` whose named test functions
@@ -143,6 +151,43 @@ def check_tuning_spaces() -> list[str]:
     return out
 
 
+SILENT_EXCEPT_TREES = ("src/repro/core", "src/repro/serving")
+
+
+def _is_broad_handler(handler: ast.ExceptHandler) -> bool:
+    """Bare ``except:`` or ``except Exception/BaseException:`` (typed
+    handlers count as classified — the author named what they absorb)."""
+    t = handler.type
+    if t is None:
+        return True
+    return isinstance(t, ast.Name) and t.id in ("Exception", "BaseException")
+
+
+def check_silent_excepts() -> list[str]:
+    """Forbid ``except [Base]Exception: pass`` (and bare ``except: pass``)
+    in the fault-tolerance trees — swallowing an unclassified failure
+    defeats retry/quarantine/rollback accounting."""
+    out = []
+    for tree_dir in SILENT_EXCEPT_TREES:
+        for path in sorted((ROOT / tree_dir).rglob("*.py")):
+            try:
+                tree = ast.parse(path.read_text(), filename=str(path))
+            except SyntaxError:                   # pragma: no cover
+                continue                          # _check_file reports it
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.ExceptHandler):
+                    continue
+                if not _is_broad_handler(node):
+                    continue
+                if all(isinstance(s, ast.Pass) for s in node.body):
+                    rel = path.relative_to(ROOT)
+                    out.append(
+                        f"{rel}:{node.lineno}: broad silent except "
+                        "(name the exception types or record the failure "
+                        "— silent swallowing defeats fault classification)")
+    return out
+
+
 EXTRACT_PY = "src/repro/core/extract.py"
 EXTRACT_TESTS = "tests/test_extract.py"
 
@@ -228,6 +273,7 @@ def main() -> int:
         for path in sorted((ROOT / tree).rglob("*.py")):
             violations += _check_file(path, {"sys.path.insert"})
     violations += check_tuning_spaces()
+    violations += check_silent_excepts()
     violations += check_recognizer_coverage()
     for v in violations:
         print(v)
